@@ -1,0 +1,41 @@
+"""Table 1 reproduction: CTR prediction, ours vs logistic regression vs
+linear SVM on the 4-mode (user, ad, publisher, page-section) tensor.
+
+The Yahoo logs are proprietary; the generator reproduces the tensor's shape
+family, extreme sparsity and click/non-click balance (see data/synthetic.py).
+Paper: ours 0.89-0.90 AUC vs LR/SVM 0.73-0.75 (+20%)."""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from benchmarks.common import Table, prepare_folds, run_ours
+from repro.core import baselines
+from repro.utils.metrics import auc
+
+
+def run(max_nnz=12000, steps=200, inducing=64, seed=0):
+    tensor, binary, fold_sets = prepare_folds("ctr_day", seed=seed, folds=2, max_nnz=max_nnz)
+    assert binary
+    train, test = fold_sets[0]
+    tbl = Table(f"CTR 4-mode dims={tensor.dims} nnz={tensor.nnz}", "AUC")
+
+    v_ours, dt = run_ours(tensor, True, train, test, steps=steps, inducing=inducing, seed=seed)
+    tbl.add("ours (DFNTF)", v_ours, dt)
+
+    lr = baselines.fit_linear(train, tensor.dims, loss_kind="logistic", seed=seed)
+    tbl.add("logistic regression", auc(test.y, np.asarray(lr.score(np.asarray(test.idx)))), 0)
+
+    svm = baselines.fit_linear(train, tensor.dims, loss_kind="hinge", seed=seed)
+    tbl.add("linear SVM", auc(test.y, np.asarray(svm.score(np.asarray(test.idx)))), 0)
+    tbl.show()
+    return {r[0]: r[1] for r in tbl.rows}
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--max-nnz", type=int, default=12000)
+    ap.add_argument("--steps", type=int, default=150)
+    args = ap.parse_args()
+    run(max_nnz=args.max_nnz, steps=args.steps)

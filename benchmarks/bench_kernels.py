@@ -1,0 +1,73 @@
+"""Kernel micro-benchmarks: Pallas gp_gram + flash_attention vs jnp refs.
+
+On this CPU container the Pallas kernels run in interpret mode (Python
+executed — NOT indicative of TPU speed); the benchmark's role here is a
+correctness + shape-sweep harness and an HLO-size comparison.  The jnp path
+timings are real CPU numbers.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def run(seed=0):
+    print("\n## kernel micro-benchmarks (CPU: jnp timed; Pallas = interpret-mode check)")
+    key = jax.random.PRNGKey(seed)
+
+    # flash attention: jnp chunked path
+    from repro.kernels.flash_attention import flash_attention
+    from repro.models.layers import chunked_attention
+
+    B, S, H, hd = 2, 1024, 8, 64
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (B, S, H, hd), jnp.float32)
+    k = jax.random.normal(kk, (B, S, H, hd), jnp.float32)
+    v = jax.random.normal(kv, (B, S, H, hd), jnp.float32)
+
+    f = jax.jit(lambda q, k, v: chunked_attention(q, k, v, q_chunk=256, kv_chunk=256))
+    jax.block_until_ready(f(q, k, v))
+    t0 = time.time()
+    for _ in range(3):
+        jax.block_until_ready(f(q, k, v))
+    t_jnp = (time.time() - t0) / 3
+    print(f"  chunked attention jnp (B{B} S{S} H{H}): {t_jnp * 1e3:.1f} ms")
+
+    got = flash_attention(q[:, :256], k[:, :256], v[:, :256], interpret=True)
+    want = flash_attention(q[:, :256], k[:, :256], v[:, :256], use_ref=True)
+    err = float(jnp.max(jnp.abs(got - want)))
+    print(f"  flash_attention pallas interpret max|err| vs ref: {err:.2e}")
+
+    # gp_gram kernel vs jnp stats
+    from repro.kernels.gp_gram.ops import gram_stats
+    from repro.kernels.gp_gram import ref as gram_ref
+
+    N, D, Pp = 4096, 9, 64
+    ks = jax.random.split(key, 3)
+    xs = jax.random.normal(ks[0], (N, D), jnp.float32)
+    bs = jax.random.normal(ks[1], (Pp, D), jnp.float32)
+    y = jax.random.normal(ks[2], (N,), jnp.float32)
+    w = jnp.ones((N,), jnp.float32)
+    from repro.core.gp import KernelParams
+
+    kp = KernelParams(log_lengthscale=jnp.zeros((D,)), log_amplitude=jnp.zeros(()))
+
+    t0 = time.time()
+    ref_out = gram_ref.gram_stats_ref("ard", kp, xs, bs, y, w, None)
+    jax.block_until_ready(jax.tree.leaves(ref_out))
+    t_ref = time.time() - t0
+    print(f"  gp_gram jnp ref (N={N}, p={Pp}): {t_ref * 1e3:.1f} ms (first call)")
+    pal = gram_stats("ard", kp, xs, bs, y, w, None, tile_n=512, interpret=True)
+    for a, b in zip(jax.tree.leaves(pal), jax.tree.leaves(ref_out)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-4, atol=2e-4)
+    print("  gp_gram pallas interpret == ref: ok")
+    return {"attention_jnp_ms": t_jnp * 1e3}
+
+
+if __name__ == "__main__":
+    argparse.ArgumentParser().parse_args()
+    run()

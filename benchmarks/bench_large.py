@@ -1,0 +1,65 @@
+"""Figure 2(b-d) reproduction: large-tensor accuracy (ACC, DBLP, NELL
+footprints), ours vs distributed CP (GigaTensor's model class).
+
+The paper's cluster-scale datasets are size-capped for the CPU container;
+shapes/sparsity match §6.2, and the protocol (80% train, multiple sampled
+test sets of nonzeros + zeros) matches §6.3.
+
+Caveat recorded in EXPERIMENTS.md: `acc` keeps the paper's density at ~40x
+reduced dims, leaving its 3000-wide mode with <1 observation/row — every
+factor model degenerates there (CP collapses to the zero predictor and
+"wins" MSE); dblp/nell at healthier coverage reproduce the paper's ordering.
+"""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from benchmarks.common import Table, eval_scores, prepare_folds, run_cp, run_ours
+
+
+def run(datasets=("acc", "dblp", "nell"), max_nnz=3000, steps=120, inducing=50,
+        test_sets=5, seed=0):
+    results = {}
+    for name in datasets:
+        scales = {"acc": 0.22, "dblp": 0.28, "nell": 0.28}
+        tensor, binary, fold_sets = prepare_folds(
+            name, seed=seed, folds=5, max_nnz=max_nnz, dim_scale=scales.get(name, 1.0)
+        )
+        train, _ = fold_sets[0]
+        metric = "AUC" if binary else "MSE"
+        tbl = Table(f"{name} dims={tensor.dims} nnz={tensor.nnz}", metric)
+
+        # train once, evaluate on `test_sets` sampled test sets (paper: 50)
+        from repro.core.model import DFNTF, FitConfig
+
+        cfg = FitConfig(task="binary" if binary else "continuous", rank=3,
+                        num_inducing=inducing, optimizer="adam", steps=steps,
+                        learning_rate=2e-2, seed=seed)
+        model = DFNTF(tensor.dims, cfg)
+        model.fit(train)
+
+        cp_v, _ = run_cp(tensor, binary, train, fold_sets[0][1], balanced=True, seed=seed)
+        ours_vals = []
+        rng = np.random.default_rng(seed + 1)
+        from repro.data import balanced_train_test, kfold_split
+
+        for t in range(test_sets):
+            tr_rows, te_rows = kfold_split(rng, tensor, folds=5)[t % 5]
+            _, test = balanced_train_test(rng, tensor, tr_rows, te_rows, binary=binary)
+            s = model.predict_proba(test.idx) if binary else model.predict(test.idx)
+            ours_vals.append(eval_scores(binary, test.y, s))
+        tbl.add(f"ours (avg {test_sets} test sets)", float(np.mean(ours_vals)), 0)
+        tbl.add("CP (distributed class)", cp_v, 0)
+        tbl.show()
+        results[name] = {"ours": float(np.mean(ours_vals)), "cp": cp_v}
+    return results
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--max-nnz", type=int, default=3000)
+    ap.add_argument("--steps", type=int, default=120)
+    args = ap.parse_args()
+    run(max_nnz=args.max_nnz, steps=args.steps)

@@ -1,0 +1,33 @@
+"""Run every paper benchmark with CPU-budget sizes.
+
+  PYTHONPATH=src python -m benchmarks.run            # full suite
+  PYTHONPATH=src python -m benchmarks.run --only ctr # one table/figure
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+BENCHES = ["small_data", "large", "scalability", "reduce", "fixed_point", "ctr", "kernels"]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, choices=BENCHES)
+    args = ap.parse_args()
+
+    selected = [args.only] if args.only else BENCHES
+    t0 = time.time()
+    results = {}
+    for name in selected:
+        print(f"\n================ benchmarks.bench_{name} ================")
+        t = time.time()
+        mod = __import__(f"benchmarks.bench_{name}", fromlist=["run"])
+        results[name] = mod.run()
+        print(f"[bench_{name}: {time.time() - t:.1f}s]")
+    print(f"\nall benchmarks done in {time.time() - t0:.1f}s")
+    return results
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""Binary tensor factorization: the Probit model + tight ELBO (Thm 4.2) with
+the lambda fixed-point inner loop (Eq. 8 / Lemma 4.3).
+
+Uses the Enron-footprint knowledge tensor; evaluates AUC on balanced
+held-out entries, the §6.1 protocol.
+
+  PYTHONPATH=src python examples/binary_tensor.py
+"""
+import numpy as np
+
+from repro.core.model import DFNTF, FitConfig
+from repro.data import balanced_train_test, kfold_split, make_sparse_tensor
+from repro.utils.metrics import auc
+
+tensor, _ = make_sparse_tensor("enron", seed=0)
+rng = np.random.default_rng(0)
+train_rows, test_rows = kfold_split(rng, tensor, folds=5)[0]
+train, test = balanced_train_test(rng, tensor, train_rows, test_rows, binary=True)
+print(f"enron-like: dims={tensor.dims} nnz={tensor.nnz}; train={len(train)} test={len(test)}")
+
+model = DFNTF(
+    tensor.dims,
+    FitConfig(task="binary", rank=3, num_inducing=50, optimizer="adam",
+              steps=150, learning_rate=2e-2, fixed_point_iters=5),
+)
+model.fit(train, verbose=True)
+p = model.predict_proba(test.idx)
+print(f"\ntest AUC = {auc(test.y, p):.4f}")
+print(f"final tight ELBO L2* = {model.elbo():.2f}")

@@ -1,0 +1,33 @@
+"""CTR prediction (§6.4): 4-mode (user, ad, publisher, page-section) binary
+tensor; DFNTF vs logistic regression vs linear SVM, balanced clicks.
+
+  PYTHONPATH=src python examples/ctr_prediction.py
+"""
+import numpy as np
+
+from repro.core import baselines
+from repro.core.model import DFNTF, FitConfig
+from repro.data import balanced_train_test, kfold_split, make_sparse_tensor
+from repro.utils.metrics import auc
+
+tensor, _ = make_sparse_tensor("ctr_day", seed=0, max_nnz=2000)
+rng = np.random.default_rng(0)
+train_rows, test_rows = kfold_split(rng, tensor, folds=5)[0]
+train, test = balanced_train_test(rng, tensor, train_rows, test_rows, binary=True)
+print(f"CTR tensor dims={tensor.dims} (4-mode), clicks={tensor.nnz}")
+print(f"train={len(train)} (clicks + sampled non-clicks), test={len(test)}")
+
+model = DFNTF(tensor.dims, FitConfig(task="binary", rank=3, num_inducing=50,
+                                     optimizer="adam", steps=150, learning_rate=2e-2))
+model.fit(train)
+a_ours = auc(test.y, model.predict_proba(test.idx))
+
+lr = baselines.fit_linear(train, tensor.dims, loss_kind="logistic")
+a_lr = auc(test.y, np.asarray(lr.score(np.asarray(test.idx))))
+svm = baselines.fit_linear(train, tensor.dims, loss_kind="hinge")
+a_svm = auc(test.y, np.asarray(svm.score(np.asarray(test.idx))))
+
+print(f"\nDFNTF (ours)        AUC = {a_ours:.4f}")
+print(f"logistic regression AUC = {a_lr:.4f}")
+print(f"linear SVM          AUC = {a_svm:.4f}")
+print(f"improvement over LR: {100 * (a_ours - a_lr) / a_lr:+.1f}% (paper: ~+20%)")

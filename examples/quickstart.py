@@ -1,0 +1,37 @@
+"""Quickstart: factorize a sparse continuous tensor with DFNTF.
+
+Builds a synthetic 3-mode tensor with a NONLINEAR ground truth (RBF mixture
+over concatenated latent factors — exactly the function class the paper's
+model captures and a multilinear CP model cannot), trains the paper's model
+with balanced zero/nonzero sampling, and compares against CP.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core import baselines
+from repro.core.model import DFNTF, FitConfig
+from repro.data import balanced_train_test, kfold_split, make_sparse_tensor
+from repro.utils.metrics import mse
+
+tensor, truth = make_sparse_tensor("alog", seed=0)
+print(f"tensor dims={tensor.dims}, nnz={tensor.nnz} ({tensor.density:.2%} dense)")
+
+rng = np.random.default_rng(0)
+train_rows, test_rows = kfold_split(rng, tensor, folds=5)[0]
+train, test = balanced_train_test(rng, tensor, train_rows, test_rows)
+print(f"train={len(train)} entries (balanced zeros+nonzeros), test={len(test)}")
+
+# ---- the paper's model: GP over concatenated per-mode latent factors
+model = DFNTF(tensor.dims, FitConfig(task="continuous", rank=3, num_inducing=100,
+                                     optimizer="adam", steps=300, learning_rate=2e-2))
+model.fit(train, verbose=True)
+ours = mse(test.y, model.predict(test.idx))
+
+# ---- multilinear baseline on the same data
+cp = baselines.fit_cp(train, tensor.dims, rank=3, steps=300)
+cp_mse = mse(test.y, np.asarray(cp.score(test.idx)))
+
+print(f"\nDFNTF (ours) test MSE: {ours:.4f}")
+print(f"CP (multilinear) MSE : {cp_mse:.4f}")
+print("nonlinear factorization wins" if ours < cp_mse else "CP wins (unexpected)")

@@ -1,0 +1,71 @@
+"""End-to-end LM training driver: train a ~100M-parameter qwen3-family model
+for a few hundred steps on the synthetic token pipeline, then decode from it.
+
+~100M params: 12 layers x d_model 512 + a 32k vocab (see below).  Runs on
+CPU in tens of minutes; on a real TPU slice pass --mesh host.
+
+  PYTHONPATH=src python examples/train_lm.py --steps 300
+"""
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_arch
+from repro.data.loader import token_batches
+from repro.launch.steps import make_train_step
+from repro.models import init_decode_cache, init_lm_params, lm_decode_step
+from repro.models.lm import lm_prefill
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=300)
+ap.add_argument("--batch", type=int, default=8)
+ap.add_argument("--seq", type=int, default=128)
+ap.add_argument("--lr", type=float, default=1e-3)
+args = ap.parse_args()
+
+# ~100M-parameter member of the qwen3 family
+cfg = dataclasses.replace(
+    get_arch("qwen3-0.6b"),
+    num_layers=12, d_model=512, num_heads=8, num_kv_heads=4, d_ff=1536,
+    vocab_size=32768, dtype="float32",
+)
+params = init_lm_params(jax.random.PRNGKey(0), cfg)
+n = sum(p.size for p in jax.tree.leaves(params))
+print(f"model: {n / 1e6:.1f}M params ({cfg.num_layers}L d{cfg.d_model})")
+
+opt, train_step = make_train_step(cfg, None, learning_rate=args.lr)
+opt_state = opt.init(params)
+step_fn = jax.jit(train_step, donate_argnums=(0, 1))
+
+t0 = time.time()
+losses = []
+for step, batch in enumerate(token_batches(cfg, args.batch, args.seq, seed=0)):
+    if step >= args.steps:
+        break
+    params, opt_state, m = step_fn(params, opt_state, batch)
+    losses.append(float(m["loss"]))
+    if step % 25 == 0 or step == args.steps - 1:
+        tok_s = (step + 1) * args.batch * args.seq / (time.time() - t0)
+        print(f"step {step:4d}  loss {losses[-1]:7.4f}  ({tok_s:,.0f} tok/s)")
+
+print(f"\nloss: {losses[0]:.3f} -> {losses[-1]:.3f} "
+      f"({'learning' if losses[-1] < losses[0] - 0.3 else 'check hyperparams'})")
+
+# ---- decode a few tokens greedily from a prompt
+prompt = next(token_batches(cfg, 2, 32, seed=1))["tokens"]
+logits, cache = jax.jit(lambda p, b: lm_prefill(p, b, cfg, context_len=64))(
+    params, {"tokens": prompt}
+)
+tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+out = [int(tok[0, 0])]
+step_d = jax.jit(lambda p, c, t, pos: lm_decode_step(p, c, t, pos, cfg))
+for i in range(16):
+    logits, cache = step_d(params, cache, tok, jnp.int32(32 + i))
+    tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+    out.append(int(tok[0, 0]))
+print("prompt tail:", [int(t) for t in prompt[0, -8:]])
+print("generated  :", out)
+print("(structure: x' = (31x + 7) mod V — a trained model continues it)")

@@ -1,0 +1,18 @@
+"""repro: Distributed Flexible Nonlinear Tensor Factorization (NIPS 2016) on JAX/TPU.
+
+Layers:
+  repro.core         -- the paper's contribution (GP factorization, tight ELBOs,
+                        key-value-free distributed inference)
+  repro.data         -- sparse tensor store, samplers, synthetic datasets
+  repro.optim        -- Adam / SGD / L-BFGS, schedules
+  repro.checkpoint   -- pytree checkpointing
+  repro.models       -- assigned architecture zoo (dense / MoE / SSM / hybrid /
+                        audio / VLM decoder backbones)
+  repro.configs      -- architecture + input-shape registry
+  repro.kernels      -- Pallas TPU kernels (+ jnp reference oracles)
+  repro.distributed  -- mesh-axis conventions, sharding rules
+  repro.launch       -- mesh / dryrun / train / serve entry points
+  repro.roofline     -- TPU v5e roofline accounting from compiled artifacts
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,109 @@
+"""Pytree checkpointing via msgpack (no pickle; safe to load).
+
+Arrays are stored as (dtype, shape, raw bytes); the tree structure is restored
+against a caller-provided template pytree, so arbitrary code can never be
+deserialized.  Supports step-numbered checkpoints with retention.
+"""
+from __future__ import annotations
+
+import os
+import re
+from typing import Any
+
+import jax
+import msgpack
+import numpy as np
+
+_EXT = ".ckpt.msgpack"
+
+
+def _np_dtype(name: str) -> np.dtype:
+    """Resolve a dtype name, including ml_dtypes extensions (bfloat16 etc.)."""
+    try:
+        return np.dtype(name)
+    except TypeError:
+        import ml_dtypes
+
+        return np.dtype(getattr(ml_dtypes, name))
+
+
+def _encode_leaf(x) -> dict:
+    arr = np.asarray(x)
+    return {
+        b"dtype": arr.dtype.name.encode(),
+        b"shape": list(arr.shape),
+        b"data": arr.tobytes(),
+    }
+
+
+def _decode_leaf(d: dict) -> np.ndarray:
+    return np.frombuffer(d[b"data"], dtype=_np_dtype(d[b"dtype"].decode())).reshape(
+        d[b"shape"]
+    )
+
+
+def save(path: str, tree: Any) -> None:
+    leaves = jax.tree.leaves(tree)
+    payload = msgpack.packb([_encode_leaf(l) for l in leaves], use_bin_type=True)
+    tmp = path + ".tmp"
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    with open(tmp, "wb") as f:
+        f.write(payload)
+    os.replace(tmp, path)
+
+
+def restore(path: str, template: Any) -> Any:
+    with open(path, "rb") as f:
+        raw = msgpack.unpackb(f.read(), raw=True)
+    leaves = [_decode_leaf(d) for d in raw]
+    treedef = jax.tree.structure(template)
+    t_leaves = jax.tree.leaves(template)
+    if len(leaves) != len(t_leaves):
+        raise ValueError(
+            f"checkpoint has {len(leaves)} leaves, template has {len(t_leaves)}"
+        )
+    out = []
+    for got, want in zip(leaves, t_leaves):
+        want_arr = np.asarray(want)
+        if tuple(got.shape) != tuple(want_arr.shape):
+            raise ValueError(f"shape mismatch: {got.shape} vs {want_arr.shape}")
+        out.append(got.astype(want_arr.dtype))
+    return jax.tree.unflatten(treedef, out)
+
+
+class CheckpointManager:
+    """Step-numbered checkpoints in a directory, keeping the newest `keep`."""
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+
+    def _path(self, step: int) -> str:
+        return os.path.join(self.directory, f"step_{step:010d}{_EXT}")
+
+    def all_steps(self) -> list[int]:
+        pat = re.compile(r"step_(\d+)" + re.escape(_EXT) + "$")
+        steps = []
+        for name in os.listdir(self.directory):
+            m = pat.match(name)
+            if m:
+                steps.append(int(m.group(1)))
+        return sorted(steps)
+
+    def latest_step(self) -> int | None:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def save(self, step: int, tree: Any) -> str:
+        path = self._path(step)
+        save(path, tree)
+        for old in self.all_steps()[: -self.keep]:
+            os.remove(self._path(old))
+        return path
+
+    def restore(self, template: Any, step: int | None = None) -> tuple[Any, int]:
+        step = self.latest_step() if step is None else step
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.directory}")
+        return restore(self._path(step), template), step

@@ -1,0 +1,3 @@
+from repro.configs.base import (
+    SHAPES, ArchConfig, ShapeConfig, get_arch, get_reduced, list_archs, register,
+)

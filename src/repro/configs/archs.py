@@ -1,0 +1,13 @@
+"""Import all architecture configs (self-registering)."""
+from repro.configs import (  # noqa: F401
+    deepseek_7b,
+    granite_20b,
+    llava_next_mistral_7b,
+    mamba2_1_3b,
+    mixtral_8x22b,
+    musicgen_medium,
+    qwen2_72b,
+    qwen2_moe_a2_7b,
+    qwen3_0_6b,
+    zamba2_1_2b,
+)

@@ -1,0 +1,221 @@
+"""Architecture + input-shape configuration registry.
+
+Every assigned architecture is one ``ArchConfig`` (src/repro/configs/<id>.py,
+citing its source), selectable via ``--arch <id>`` in the launchers.  Each
+config also provides a REDUCED variant (<= 2 layers, d_model <= 512,
+<= 4 experts) used by the CPU smoke tests; the full configs are exercised
+only through the dry-run (ShapeDtypeStruct, no allocation).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax.numpy as jnp
+
+FAMILIES = ("dense", "moe", "ssm", "hybrid", "audio", "vlm")
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str
+    citation: str
+
+    num_layers: int = 0
+    d_model: int = 0
+    num_heads: int = 0  # 0 => attention-free
+    num_kv_heads: int = 0
+    d_ff: int = 0
+    vocab_size: int = 0
+    head_dim: int = 0  # 0 => d_model // num_heads
+
+    # attention details
+    qk_norm: bool = False
+    qkv_bias: bool = False
+    sliding_window: int = 0  # 0 => full attention
+    rope_theta: float = 10000.0
+
+    # MoE
+    num_experts: int = 0
+    experts_per_token: int = 0
+    num_shared_experts: int = 0
+    moe_d_ff: int = 0  # per-expert hidden dim (defaults to d_ff)
+
+    # SSM (Mamba2 / SSD)
+    ssm_state: int = 0
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+    ssm_conv: int = 4
+    ssm_chunk: int = 128
+
+    # hybrid: apply a SHARED attention+MLP block every k-th layer (zamba2)
+    shared_attn_every: int = 0
+
+    # modality frontend stubs ([audio]/[vlm]: the transformer backbone
+    # consumes precomputed frame/patch embeddings; the conv codec / ViT is
+    # NOT implemented, per the assignment carve-out)
+    modality: str = "text"  # text | audio | vision
+    frontend_tokens: int = 0  # stub embedding count per example
+
+    norm_eps: float = 1e-5
+    dtype: str = "bfloat16"
+
+    # Fully unroll the over-layers scan.  Production lowering keeps the scan
+    # (HLO O(1) in depth); the roofline-analysis dry-run unrolls it so that
+    # cost_analysis / collective-byte parsing see every layer (XLA's
+    # HloCostAnalysis counts a while body ONCE regardless of trip count).
+    scan_unroll: bool = False
+    # Also unroll the loops INSIDE a layer (attention q/kv chunks, SSD
+    # inter-chunk recurrence).  Only viable at validation scale (small S) —
+    # used by tests/test_roofline.py to calibrate the analytic op model.
+    inner_unroll: bool = False
+
+    # ---- beyond-paper performance levers (EXPERIMENTS.md §Perf).
+    # Cast weights to the activation dtype BEFORE the FSDP all-gather
+    # (constraining the gathered form to bf16) — halves all-gather bytes.
+    bf16_weight_gather: bool = False
+    # Replicate weights over the data axis (no FSDP): removes per-layer
+    # weight all-gathers entirely.  Only valid when params fit replicated
+    # per model-shard (small archs).
+    no_fsdp: bool = False
+    # Store weights in bf16 (f32 Adam moments stay) — FSDP all-gathers move
+    # bf16 by dtype, the robust form of the gather lever.
+    bf16_params: bool = False
+    # Downcast cotangents entering the layer stack to the activation dtype:
+    # the f32 CE loss otherwise propagates f32 cotangents through every
+    # backward dx all-reduce (observed 2x collective bytes).
+    bf16_cotangents: bool = False
+    # Remat policy: save each sublayer's post-all-reduce output instead of
+    # recomputing it — removes the 2-per-layer REMAT re-psums at the cost of
+    # 2 x (tokens x d_model) bf16 saves per layer.
+    remat_save_outputs: bool = False
+
+    # ------------------------------------------------------------- derived
+
+    @property
+    def resolved_head_dim(self) -> int:
+        if self.head_dim:
+            return self.head_dim
+        return self.d_model // max(self.num_heads, 1)
+
+    @property
+    def resolved_moe_d_ff(self) -> int:
+        return self.moe_d_ff or self.d_ff
+
+    @property
+    def attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def d_inner(self) -> int:  # SSD inner width
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim
+
+    @property
+    def activation_dtype(self):
+        return jnp.dtype(self.dtype)
+
+    def supports_seq_len(self, seq_len: int) -> bool:
+        """Sub-quadratic requirement for very long sequences (>= 128k)."""
+        if seq_len < 131072:
+            return True
+        return self.family in ("ssm", "hybrid") or self.sliding_window > 0
+
+    def with_long_context_window(self, window: int = 4096) -> "ArchConfig":
+        """The sliding-window VARIANT used to run full-attention archs on
+        long_500k (allowed by the assignment; recorded in the roofline
+        table as '<name>+swa')."""
+        if self.sliding_window:
+            return self
+        return dataclasses.replace(self, sliding_window=window)
+
+    def param_count(self) -> int:
+        """Approximate parameter count (embeddings + blocks), for 6ND."""
+        d, l = self.d_model, self.num_layers
+        total = self.vocab_size * d  # embedding (tied output head)
+        hd = self.resolved_head_dim
+        if self.family in ("dense", "moe", "audio", "vlm", "hybrid"):
+            attn = d * hd * self.num_heads + 2 * d * hd * self.num_kv_heads + hd * self.num_heads * d
+            if self.family == "hybrid":
+                # one SHARED attention+MLP block
+                total += attn + 3 * d * self.d_ff
+            else:
+                total += l * attn
+        if self.family in ("dense", "audio", "vlm"):
+            total += l * 3 * d * self.d_ff
+        if self.family == "moe":
+            e_ff = self.resolved_moe_d_ff
+            total += l * (self.num_experts * 3 * d * e_ff + d * self.num_experts)
+            total += l * self.num_shared_experts * 3 * d * e_ff
+        if self.family in ("ssm", "hybrid"):
+            di, s = self.d_inner, self.ssm_state
+            h = self.ssm_heads
+            per = d * (2 * di + 2 * s + h) + di * self.ssm_conv + di * d
+            total += l * per
+        return int(total)
+
+    def active_param_count(self) -> int:
+        """Active-per-token params (MoE: only routed top-k experts count)."""
+        if self.family != "moe":
+            return self.param_count()
+        d, l = self.d_model, self.num_layers
+        hd = self.resolved_head_dim
+        e_ff = self.resolved_moe_d_ff
+        total = self.vocab_size * d
+        total += l * (
+            d * hd * self.num_heads + 2 * d * hd * self.num_kv_heads + hd * self.num_heads * d
+        )
+        active = self.experts_per_token + self.num_shared_experts
+        total += l * (active * 3 * d * e_ff + d * self.num_experts)
+        return int(total)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    mode: str  # "train" | "prefill" | "decode"
+
+
+SHAPES: dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+_REGISTRY: dict[str, ArchConfig] = {}
+_REDUCED: dict[str, Callable[[], ArchConfig]] = {}
+
+
+def register(cfg: ArchConfig, reduced: Callable[[], ArchConfig]) -> ArchConfig:
+    if cfg.family not in FAMILIES:
+        raise ValueError(f"bad family {cfg.family}")
+    _REGISTRY[cfg.name] = cfg
+    _REDUCED[cfg.name] = reduced
+    return cfg
+
+
+def get_arch(name: str) -> ArchConfig:
+    _ensure_loaded()
+    return _REGISTRY[name]
+
+
+def get_reduced(name: str) -> ArchConfig:
+    _ensure_loaded()
+    return _REDUCED[name]()
+
+
+def list_archs() -> list[str]:
+    _ensure_loaded()
+    return sorted(_REGISTRY)
+
+
+def _ensure_loaded():
+    # import the per-arch modules (they self-register)
+    from repro.configs import archs  # noqa: F401

@@ -1,0 +1,26 @@
+"""deepseek-7b [dense] — llama-arch, full MHA (kv=32) [arXiv:2401.02954]."""
+import dataclasses
+
+from repro.configs.base import ArchConfig, register
+
+CONFIG = ArchConfig(
+    name="deepseek-7b",
+    family="dense",
+    citation="arXiv:2401.02954 (DeepSeek LLM 7B)",
+    num_layers=30,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=32,
+    d_ff=11008,
+    vocab_size=102400,
+)
+
+
+def reduced() -> ArchConfig:
+    return dataclasses.replace(
+        CONFIG, num_layers=2, d_model=256, num_heads=4, num_kv_heads=4,
+        d_ff=512, vocab_size=512,
+    )
+
+
+register(CONFIG, reduced)

@@ -1,0 +1,26 @@
+"""granite-20b [dense] — llama-arch code model, MQA (kv=1) [arXiv:2405.04324]."""
+import dataclasses
+
+from repro.configs.base import ArchConfig, register
+
+CONFIG = ArchConfig(
+    name="granite-20b",
+    family="dense",
+    citation="arXiv:2405.04324 (IBM Granite Code 20B)",
+    num_layers=52,
+    d_model=6144,
+    num_heads=48,
+    num_kv_heads=1,  # MQA
+    d_ff=24576,
+    vocab_size=49152,
+)
+
+
+def reduced() -> ArchConfig:
+    return dataclasses.replace(
+        CONFIG, num_layers=2, d_model=256, num_heads=4, num_kv_heads=1,
+        d_ff=512, vocab_size=512,
+    )
+
+
+register(CONFIG, reduced)

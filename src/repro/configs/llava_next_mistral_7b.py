@@ -1,0 +1,30 @@
+"""llava-next-mistral-7b [vlm] — Mistral-7B decoder consuming anyres image
+patch embeddings; the SigLIP/CLIP vision tower + projector are STUBS providing
+precomputed patch embeddings [hf:llava-hf/llava-v1.6-mistral-7b-hf]."""
+import dataclasses
+
+from repro.configs.base import ArchConfig, register
+
+CONFIG = ArchConfig(
+    name="llava-next-mistral-7b",
+    family="vlm",
+    citation="hf:llava-hf/llava-v1.6-mistral-7b-hf model card",
+    num_layers=32,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    d_ff=14336,
+    vocab_size=32000,
+    modality="vision",
+    frontend_tokens=2880,  # anyres: 5 tiles x 576 patches (24x24 @ 336px)
+)
+
+
+def reduced() -> ArchConfig:
+    return dataclasses.replace(
+        CONFIG, num_layers=2, d_model=256, num_heads=4, num_kv_heads=2,
+        d_ff=512, vocab_size=512, frontend_tokens=16,
+    )
+
+
+register(CONFIG, reduced)

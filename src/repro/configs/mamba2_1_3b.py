@@ -1,0 +1,31 @@
+"""mamba2-1.3b [ssm] — attention-free SSD (state-space duality) [arXiv:2405.21060]."""
+import dataclasses
+
+from repro.configs.base import ArchConfig, register
+
+CONFIG = ArchConfig(
+    name="mamba2-1.3b",
+    family="ssm",
+    citation="arXiv:2405.21060 (Mamba-2, SSD)",
+    num_layers=48,
+    d_model=2048,
+    num_heads=0,  # attention-free
+    num_kv_heads=0,
+    d_ff=0,
+    vocab_size=50280,
+    ssm_state=128,
+    ssm_head_dim=64,
+    ssm_expand=2,
+    ssm_conv=4,
+    ssm_chunk=256,
+)
+
+
+def reduced() -> ArchConfig:
+    return dataclasses.replace(
+        CONFIG, num_layers=2, d_model=256, vocab_size=512, ssm_state=32,
+        ssm_head_dim=32, ssm_chunk=32,
+    )
+
+
+register(CONFIG, reduced)

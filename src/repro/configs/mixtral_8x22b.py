@@ -1,0 +1,30 @@
+"""mixtral-8x22b [moe] — 8 experts top-2, GQA kv=8, SWA [arXiv:2401.04088]."""
+import dataclasses
+
+from repro.configs.base import ArchConfig, register
+
+CONFIG = ArchConfig(
+    name="mixtral-8x22b",
+    family="moe",
+    citation="arXiv:2401.04088 (Mixtral of Experts)",
+    num_layers=56,
+    d_model=6144,
+    num_heads=48,
+    num_kv_heads=8,
+    d_ff=16384,
+    vocab_size=32768,
+    num_experts=8,
+    experts_per_token=2,
+    sliding_window=4096,
+)
+
+
+def reduced() -> ArchConfig:
+    return dataclasses.replace(
+        CONFIG, num_layers=2, d_model=256, num_heads=4, num_kv_heads=2,
+        d_ff=512, vocab_size=512, num_experts=4, experts_per_token=2,
+        sliding_window=64,
+    )
+
+
+register(CONFIG, reduced)

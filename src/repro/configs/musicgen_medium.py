@@ -1,0 +1,30 @@
+"""musicgen-medium [audio] — decoder-only over EnCodec tokens; the EnCodec
+conv codec + text conditioner are STUBS providing precomputed conditioning
+embeddings [arXiv:2306.05284]."""
+import dataclasses
+
+from repro.configs.base import ArchConfig, register
+
+CONFIG = ArchConfig(
+    name="musicgen-medium",
+    family="audio",
+    citation="arXiv:2306.05284 (MusicGen medium)",
+    num_layers=48,
+    d_model=1536,
+    num_heads=24,
+    num_kv_heads=24,
+    d_ff=6144,
+    vocab_size=2048,  # EnCodec codebook
+    modality="audio",
+    frontend_tokens=64,  # stub conditioning embeddings (T5-text stand-in)
+)
+
+
+def reduced() -> ArchConfig:
+    return dataclasses.replace(
+        CONFIG, num_layers=2, d_model=256, num_heads=4, num_kv_heads=4,
+        d_ff=512, vocab_size=512, frontend_tokens=8,
+    )
+
+
+register(CONFIG, reduced)

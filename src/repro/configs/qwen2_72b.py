@@ -1,0 +1,28 @@
+"""qwen2-72b [dense] — GQA kv=8, QKV bias [arXiv:2407.10671]."""
+import dataclasses
+
+from repro.configs.base import ArchConfig, register
+
+CONFIG = ArchConfig(
+    name="qwen2-72b",
+    family="dense",
+    citation="arXiv:2407.10671 (Qwen2 72B)",
+    num_layers=80,
+    d_model=8192,
+    num_heads=64,
+    num_kv_heads=8,
+    d_ff=29568,
+    vocab_size=152064,
+    qkv_bias=True,
+    rope_theta=1_000_000.0,
+)
+
+
+def reduced() -> ArchConfig:
+    return dataclasses.replace(
+        CONFIG, num_layers=2, d_model=256, num_heads=4, num_kv_heads=2,
+        d_ff=512, vocab_size=512,
+    )
+
+
+register(CONFIG, reduced)

@@ -1,0 +1,32 @@
+"""qwen2-moe-a2.7b [moe] — 60 routed experts top-4 + 4 shared experts,
+fine-grained expert d_ff=1408 [hf:Qwen/Qwen1.5-MoE-A2.7B]."""
+import dataclasses
+
+from repro.configs.base import ArchConfig, register
+
+CONFIG = ArchConfig(
+    name="qwen2-moe-a2.7b",
+    family="moe",
+    citation="hf:Qwen/Qwen1.5-MoE-A2.7B model card",
+    num_layers=24,
+    d_model=2048,
+    num_heads=16,
+    num_kv_heads=16,
+    d_ff=1408,  # per-expert hidden dim (fine-grained experts)
+    vocab_size=151936,
+    num_experts=60,
+    experts_per_token=4,
+    num_shared_experts=4,
+    qkv_bias=True,
+)
+
+
+def reduced() -> ArchConfig:
+    return dataclasses.replace(
+        CONFIG, num_layers=2, d_model=256, num_heads=4, num_kv_heads=4,
+        d_ff=128, vocab_size=512, num_experts=4, experts_per_token=2,
+        num_shared_experts=1,
+    )
+
+
+register(CONFIG, reduced)

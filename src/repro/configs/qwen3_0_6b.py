@@ -1,0 +1,29 @@
+"""qwen3-0.6b [dense] — qk_norm, GQA (kv=8), head_dim 128 [hf:Qwen/Qwen3-8B]."""
+import dataclasses
+
+from repro.configs.base import ArchConfig, register
+
+CONFIG = ArchConfig(
+    name="qwen3-0.6b",
+    family="dense",
+    citation="hf:Qwen/Qwen3-8B model card (0.6B sibling)",
+    num_layers=28,
+    d_model=1024,
+    num_heads=16,
+    num_kv_heads=8,
+    d_ff=3072,
+    vocab_size=151936,
+    head_dim=128,  # decoupled from d_model/num_heads in Qwen3
+    qk_norm=True,
+    rope_theta=1_000_000.0,
+)
+
+
+def reduced() -> ArchConfig:
+    return dataclasses.replace(
+        CONFIG, num_layers=2, d_model=256, num_heads=4, num_kv_heads=2,
+        head_dim=64, d_ff=512, vocab_size=512,
+    )
+
+
+register(CONFIG, reduced)

@@ -1,0 +1,37 @@
+"""zamba2-1.2b [hybrid] — Mamba2 backbone + one SHARED attention block applied
+periodically [arXiv:2411.15242]."""
+import dataclasses
+
+from repro.configs.base import ArchConfig, register
+
+CONFIG = ArchConfig(
+    name="zamba2-1.2b",
+    family="hybrid",
+    citation="arXiv:2411.15242 (Zamba2 1.2B)",
+    num_layers=38,
+    d_model=2048,
+    num_heads=32,
+    num_kv_heads=32,
+    d_ff=8192,
+    vocab_size=32000,
+    ssm_state=64,
+    ssm_head_dim=64,
+    ssm_expand=2,
+    ssm_conv=4,
+    ssm_chunk=256,
+    shared_attn_every=6,  # shared transformer block every 6 mamba layers
+    # long-context decode: the shared attention block uses a sliding window
+    # (full 500k KV for the shared block would defeat the SSM's O(1) state)
+    sliding_window=4096,
+)
+
+
+def reduced() -> ArchConfig:
+    return dataclasses.replace(
+        CONFIG, num_layers=4, d_model=256, num_heads=4, num_kv_heads=4,
+        d_ff=512, vocab_size=512, ssm_state=16, ssm_head_dim=32,
+        ssm_chunk=32, shared_attn_every=2, sliding_window=64,
+    )
+
+
+register(CONFIG, reduced)

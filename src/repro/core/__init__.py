@@ -1,0 +1,16 @@
+# The paper's primary contribution: flexible GP tensor factorization with
+# tight ELBOs (Thm 4.1/4.2), the lambda fixed point (Lemma 4.3), and the
+# key-value-free distributed inference step (psum-aggregated statistics).
+from repro.core.elbo import DFNTFParams, elbo_binary, elbo_continuous, init_params
+from repro.core.fixed_point import lam_step, run_fixed_point
+from repro.core.gp import KernelParams, gather_inputs, init_kernel_params, kernel_diag, kernel_matrix
+from repro.core.predict import PosteriorCache, build_cache, predict_f, predict_proba, predict_y_continuous
+from repro.core.stats import SuffStats, binary_stats, sufficient_stats
+
+__all__ = [
+    "DFNTFParams", "KernelParams", "PosteriorCache", "SuffStats",
+    "binary_stats", "build_cache", "elbo_binary", "elbo_continuous",
+    "gather_inputs", "init_kernel_params", "init_params", "kernel_diag",
+    "kernel_matrix", "lam_step", "predict_f", "predict_proba",
+    "predict_y_continuous", "run_fixed_point", "sufficient_stats",
+]

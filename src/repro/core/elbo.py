@@ -1,0 +1,253 @@
+"""Tight variational evidence lower bounds (Theorems 4.1 and 4.2).
+
+Both bounds are closed-form functions of the model parameters and the
+additive sufficient statistics from ``core.stats`` — the optimal variational
+posteriors q(v) (and q(z) for binary data) have been substituted analytically,
+which is what makes fully-decoupled distributed computation possible.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import gp, linalg
+from repro.core.stats import SuffStats
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class DFNTFParams:
+    """All learnable parameters of the factorization model.
+
+    factors:   tuple of U^{(k)}, each [d_k, r_k] (standard-normal prior).
+    inducing:  B, [p, sum_k r_k].
+    kernel:    KernelParams (log lengthscale / amplitude).
+    log_beta:  scalar, noise precision (continuous likelihood only).
+    lam:       [p] convex-conjugate variational parameter (binary only);
+               optimized by the fixed-point iteration, not by the outer
+               gradient steps.
+    """
+
+    factors: tuple[jax.Array, ...]
+    inducing: jax.Array
+    kernel: gp.KernelParams
+    log_beta: jax.Array
+    lam: jax.Array
+
+    @property
+    def beta(self) -> jax.Array:
+        return jnp.exp(self.log_beta)
+
+    @property
+    def num_inducing(self) -> int:
+        return self.inducing.shape[0]
+
+    @property
+    def input_dim(self) -> int:
+        return self.inducing.shape[1]
+
+
+def init_params(
+    key: jax.Array,
+    dims: tuple[int, ...],
+    rank: int | tuple[int, ...],
+    num_inducing: int = 100,
+    kernel_kind: str = "ard",
+    factor_scale: float = 0.1,
+    lengthscale: float = 1.0,
+    amplitude: float = 1.0,
+    beta: float = 1.0,
+    dtype=jnp.float32,
+) -> DFNTFParams:
+    """Random initialization matching the paper's setup (p=100, ARD kernel)."""
+    ranks = (rank,) * len(dims) if isinstance(rank, int) else tuple(rank)
+    if len(ranks) != len(dims):
+        raise ValueError("rank tuple must match number of modes")
+    keys = jax.random.split(key, len(dims) + 1)
+    factors = tuple(
+        factor_scale * jax.random.normal(keys[k], (dims[k], ranks[k]), dtype)
+        for k in range(len(dims))
+    )
+    input_dim = sum(ranks)
+    inducing = jax.random.normal(keys[-1], (num_inducing, input_dim), dtype) * factor_scale
+    return DFNTFParams(
+        factors=factors,
+        inducing=inducing,
+        kernel=gp.init_kernel_params(kernel_kind, input_dim, lengthscale, amplitude, dtype),
+        log_beta=jnp.asarray(jnp.log(beta), dtype),
+        lam=jnp.zeros((num_inducing,), dtype),
+    )
+
+
+def _log_prior_factors(params: DFNTFParams) -> jax.Array:
+    """-1/2 sum_k ||U^(k)||_F^2 (standard-normal prior, up to a constant)."""
+    return -0.5 * sum(jnp.sum(u * u) for u in params.factors)
+
+
+def elbo_continuous(
+    kind: str, params: DFNTFParams, stats: SuffStats, jitter: float = linalg.DEFAULT_JITTER
+) -> jax.Array:
+    """L1* of Theorem 4.1 from psum-able sufficient statistics.
+
+    L1* = 1/2 log|Kbb| - 1/2 log|Kbb + beta A1| - beta/2 a2 - beta/2 a3
+          + beta/2 tr(Kbb^{-1} A1) - 1/2 sum_k ||U^k||_F^2
+          + beta^2/2 a4^T (Kbb + beta A1)^{-1} a4 + N/2 log(beta / 2 pi)
+
+    Computed in WHITENED form: with L = chol(Kbb), A1w = L^-1 A1 L^-T and
+    M = I + beta A1w,
+        1/2 log|Kbb| - 1/2 log|Kbb + beta A1| = -1/2 log|M|
+        tr(Kbb^-1 A1) = tr(A1w)
+        a4^T (Kbb + beta A1)^-1 a4 = a4w^T M^-1 a4w,  a4w = L^-1 a4.
+    chol(M) has unit-plus diagonal and never fails in f32 even when the
+    learned noise precision beta grows to ~1e4 (the direct chol does).
+    """
+    beta = params.beta
+    kbb = gp.kernel_matrix(kind, params.kernel, params.inducing, params.inducing)
+    chol_kbb = linalg.safe_cholesky(kbb, jitter)
+    a1w = linalg.whiten(chol_kbb, stats.a1)
+    p = kbb.shape[0]
+    m = jnp.eye(p, dtype=kbb.dtype) + beta * a1w
+    chol_m = linalg.safe_cholesky(m, jitter)
+    a4w = linalg.whiten_vec(chol_kbb, stats.a4)
+    return (
+        -0.5 * linalg.chol_logdet(chol_m)
+        - 0.5 * beta * stats.a2
+        - 0.5 * beta * stats.a3
+        + 0.5 * beta * jnp.trace(a1w)
+        + _log_prior_factors(params)
+        + 0.5 * beta**2 * linalg.quad_form_solve(chol_m, a4w)
+        + 0.5 * stats.n * (params.log_beta - jnp.log(2.0 * jnp.pi))
+    )
+
+
+def elbo_binary(
+    kind: str,
+    params: DFNTFParams,
+    stats: SuffStats,
+    s_phi: jax.Array,
+    jitter: float = linalg.DEFAULT_JITTER,
+) -> jax.Array:
+    """L2* of Theorem 4.2 from psum-able statistics.
+
+    L2* = 1/2 log|Kbb| - 1/2 log|Kbb + A1| - 1/2 a3
+          + sum_j log Phi((2y_j-1) lam^T k(B, x_j))        (= s_phi)
+          - 1/2 lam^T Kbb lam + 1/2 tr(Kbb^{-1} A1)
+          - 1/2 sum_k ||U^k||_F^2
+    """
+    kbb = gp.kernel_matrix(kind, params.kernel, params.inducing, params.inducing)
+    chol_kbb = linalg.safe_cholesky(kbb, jitter)
+    a1w = linalg.whiten(chol_kbb, stats.a1)
+    p = kbb.shape[0]
+    chol_m = linalg.safe_cholesky(jnp.eye(p, dtype=kbb.dtype) + a1w, jitter)
+    return (
+        -0.5 * linalg.chol_logdet(chol_m)
+        - 0.5 * stats.a3
+        + s_phi
+        - 0.5 * params.lam @ (kbb @ params.lam)
+        + 0.5 * jnp.trace(a1w)
+        + _log_prior_factors(params)
+    )
+
+
+# --------------------------------------------------------------------------
+# Whitened-feature bounds (production path).
+#
+# The raw bounds above whiten the SUMMED A1, whose f32 error grows with
+# cond(Kbb) * beta and can make I + beta*A1w indefinite.  The production path
+# instead whitens each FEATURE (phi = L^-1 k, applied as one extra matmul in
+# the statistics pass — see core/stats.py), so the summed gram is PSD by
+# construction.  The math is identical (verified in test_elbo_whitened.py).
+# --------------------------------------------------------------------------
+
+
+def whiten_operator(
+    kind: str, params: DFNTFParams, jitter: float = linalg.DEFAULT_JITTER
+) -> tuple[jax.Array, jax.Array]:
+    """(chol_kbb, whiten_inv = L^{-1}) for the whitened statistics pass."""
+    kbb = gp.kernel_matrix(kind, params.kernel, params.inducing, params.inducing)
+    chol_kbb = linalg.safe_cholesky(kbb, jitter)
+    return chol_kbb, linalg.triangular_inverse(chol_kbb)
+
+
+def elbo_continuous_whitened(
+    params: DFNTFParams, wstats: SuffStats, jitter: float = linalg.DEFAULT_JITTER
+) -> jax.Array:
+    """L1* from WHITENED statistics (wstats.a1 = sum w phi phi^T etc.).
+
+    -1/2 log|I + beta A1w| - beta/2 (a2 + a3) + beta/2 tr(A1w)
+    + beta^2/2 a4w^T (I + beta A1w)^{-1} a4w - 1/2 sum||U||^2
+    + n/2 log(beta/2pi)
+    """
+    beta = params.beta
+    p = wstats.a1.shape[0]
+    m = jnp.eye(p, dtype=wstats.a1.dtype) + beta * wstats.a1
+    chol_m = linalg.safe_cholesky(m, jitter)
+    return (
+        -0.5 * linalg.chol_logdet(chol_m)
+        - 0.5 * beta * wstats.a2
+        - 0.5 * beta * wstats.a3
+        + 0.5 * beta * jnp.trace(wstats.a1)
+        + _log_prior_factors(params)
+        + 0.5 * beta**2 * linalg.quad_form_solve(chol_m, wstats.a4)
+        + 0.5 * wstats.n * (params.log_beta - jnp.log(2.0 * jnp.pi))
+    )
+
+
+def elbo_binary_whitened(
+    params: DFNTFParams,
+    wstats: SuffStats,
+    s_phi: jax.Array,
+    lam_w: jax.Array,
+    jitter: float = linalg.DEFAULT_JITTER,
+) -> jax.Array:
+    """L2* from WHITENED statistics; lam_w = L^T lam, so lam^T Kbb lam =
+    ||lam_w||^2 and s_phi was computed against lam_w^T phi == lam^T k."""
+    p = wstats.a1.shape[0]
+    chol_m = linalg.safe_cholesky(
+        jnp.eye(p, dtype=wstats.a1.dtype) + wstats.a1, jitter
+    )
+    return (
+        -0.5 * linalg.chol_logdet(chol_m)
+        - 0.5 * wstats.a3
+        + s_phi
+        - 0.5 * jnp.sum(lam_w * lam_w)
+        + 0.5 * jnp.trace(wstats.a1)
+        + _log_prior_factors(params)
+    )
+
+
+def lam_step_whitened(
+    a1w: jax.Array, a5_w: jax.Array, lam_w: jax.Array,
+    jitter: float = linalg.DEFAULT_JITTER,
+) -> jax.Array:
+    """Fixed-point update (Eq. 8) entirely in the whitened basis.
+
+    lam_w <- (I + A1w)^{-1} (A1w lam_w + a5w); converting back to the raw
+    basis is lam = L^{-T} lam_w (only needed for prediction).
+    """
+    p = a1w.shape[0]
+    chol_m = linalg.safe_cholesky(jnp.eye(p, dtype=a1w.dtype) + a1w, jitter)
+    return linalg.chol_solve(chol_m, a1w @ lam_w + a5_w)
+
+
+def optimal_qv_continuous(
+    kind: str, params: DFNTFParams, stats: SuffStats, jitter: float = linalg.DEFAULT_JITTER
+) -> tuple[jax.Array, jax.Array]:
+    """Optimal q(v) = N(mu, Lambda) recovered from the statistics.
+
+    mu     = beta Kbb (Kbb + beta A1)^{-1} a4 = beta L M^{-1} L^{-1} a4
+    Lambda = Kbb (Kbb + beta A1)^{-1} Kbb     = L M^{-1} L^T
+    (whitened forms; L = chol(Kbb), M = I + beta L^{-1} A1 L^{-T})
+    """
+    beta = params.beta
+    kbb = gp.kernel_matrix(kind, params.kernel, params.inducing, params.inducing)
+    chol_kbb = linalg.safe_cholesky(kbb, jitter)
+    p = kbb.shape[0]
+    m = jnp.eye(p, dtype=kbb.dtype) + beta * linalg.whiten(chol_kbb, stats.a1)
+    chol_m = linalg.safe_cholesky(m, jitter)
+    a4w = linalg.whiten_vec(chol_kbb, stats.a4)
+    mu = beta * (chol_kbb @ linalg.chol_solve(chol_m, a4w))
+    lam_cov = chol_kbb @ linalg.chol_solve(chol_m, chol_kbb.T)
+    return mu, lam_cov

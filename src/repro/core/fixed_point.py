@@ -1,0 +1,78 @@
+"""Fixed-point iteration for the binary bound's lambda (Eq. 8 / Lemma 4.3).
+
+    lam^{t+1} = (Kbb + A1)^{-1} (A1 lam^t + a5(lam^t))
+
+Each iteration is one pass of additive statistics (a5 depends on lam) — i.e.
+one key-value-free MapReduce round in the paper, one psum'd shard_map pass
+here.  Lemma 4.3 guarantees monotone improvement of L2* and convergence.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import gp, linalg
+from repro.core.elbo import DFNTFParams
+
+
+def lam_step(
+    kind: str,
+    params: DFNTFParams,
+    a1: jax.Array,
+    a5: jax.Array,
+    jitter: float = linalg.DEFAULT_JITTER,
+) -> jax.Array:
+    """One fixed-point update given the current statistics.
+
+    (Kbb + A1)^{-1} r solved in whitened form L^{-T} M^{-1} L^{-1} r with
+    M = I + L^{-1} A1 L^{-T} (robust in f32; see core/elbo.py).
+    """
+    kbb = gp.kernel_matrix(kind, params.kernel, params.inducing, params.inducing)
+    chol_kbb = linalg.safe_cholesky(kbb, jitter)
+    p = kbb.shape[0]
+    m = jnp.eye(p, dtype=kbb.dtype) + linalg.whiten(chol_kbb, a1)
+    chol_m = linalg.safe_cholesky(m, jitter)
+    rw = linalg.whiten_vec(chol_kbb, a1 @ params.lam + a5)
+    return jax.scipy.linalg.solve_triangular(
+        chol_kbb.T, linalg.chol_solve(chol_m, rw), lower=False
+    )
+
+
+@partial(jax.jit, static_argnames=("kind", "stats_fn", "max_iters"))
+def run_fixed_point(
+    kind: str,
+    params: DFNTFParams,
+    stats_fn: Callable[[DFNTFParams], tuple[jax.Array, jax.Array]],
+    max_iters: int = 20,
+    tol: float = 1e-5,
+) -> tuple[DFNTFParams, jax.Array]:
+    """Iterate lambda to (near) convergence.
+
+    stats_fn(params) -> (A1, a5) must recompute a5 under params.lam; it may be
+    a sharded (psum) computation.  Returns updated params and the number of
+    iterations actually run.
+    """
+
+    def cond(state):
+        _, delta, it = state
+        return jnp.logical_and(delta > tol, it < max_iters)
+
+    def body(state):
+        p, _, it = state
+        a1, a5 = stats_fn(p)
+        new_lam = lam_step(kind, p, a1, a5)
+        delta = jnp.max(jnp.abs(new_lam - p.lam))
+        return dataclass_replace_lam(p, new_lam), delta, it + 1
+
+    init = (params, jnp.asarray(jnp.inf, params.lam.dtype), jnp.asarray(0, jnp.int32))
+    final, _, iters = jax.lax.while_loop(cond, body, init)
+    return final, iters
+
+
+def dataclass_replace_lam(params: DFNTFParams, lam: jax.Array) -> DFNTFParams:
+    import dataclasses
+
+    return dataclasses.replace(params, lam=lam)

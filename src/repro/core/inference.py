@@ -1,0 +1,175 @@
+"""Distributed inference: the key-value-free MapReduce on TPU meshes.
+
+Paper §4.3.2: each mapper computes FULL fixed-size statistics/gradients from
+its shard of tensor entries and the reducer SUMS them — no key-value shuffle.
+The exact TPU-native analogue:
+
+    map    = shard_map over the mesh's data axes (each device owns a slice of
+             the entry batch and computes SuffStats from it),
+    reduce = lax.psum of the statistics over those axes (a ring all-reduce —
+             the only collective the algorithm needs).
+
+Gradients w.r.t. the replicated parameters flow through the shard_map
+transpose, which inserts exactly one more psum — i.e. the gradient
+aggregation is ALSO key-value-free, matching the paper's design where each
+mapper emits a full gradient vector.
+
+Numerics: the production path computes WHITENED statistics (phi = L^{-1} k
+applied inside the per-shard pass; see core/stats.py and core/elbo.py) so the
+p x p factorization stays finite in f32 at any learned noise precision.  The
+whitening operator L^{-1} is built from the replicated parameters, identically
+on every shard — no extra communication.
+
+The entry batch must be equally divisible over the sharded axes; callers pad
+with zero-weight entries (repro.data.loader).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.core import elbo as elbo_mod
+from repro.core import stats as stats_mod
+from repro.core.elbo import DFNTFParams
+
+
+@dataclasses.dataclass(frozen=True)
+class InferenceConfig:
+    kernel_kind: str = "ard"
+    task: str = "continuous"  # "continuous" | "binary"
+    chunk: int | None = None  # microbatch size per device (lax.scan)
+    backend: str = "jnp"  # "jnp" | "pallas"
+    data_axes: tuple[str, ...] = ("data",)  # mesh axes the batch is sharded over
+
+
+def _psum(tree, axes):
+    return jax.tree.map(lambda x: jax.lax.psum(x, axes), tree)
+
+
+def _shard(fn, mesh: Mesh | None, cfg: InferenceConfig, n_batch_args: int):
+    """Wrap fn(params, *batch) in shard_map with batch args data-sharded."""
+    if mesh is None:
+        return fn
+    spec = P(cfg.data_axes)
+    in_specs = (P(),) + (spec,) * n_batch_args
+    return jax.shard_map(fn, mesh=mesh, in_specs=in_specs, out_specs=P())
+
+
+def make_elbo_fn(
+    cfg: InferenceConfig, mesh: Mesh | None = None
+) -> Callable[[DFNTFParams, jax.Array, jax.Array, jax.Array], jax.Array]:
+    """Build elbo(params, idx, y, w) -> scalar, optionally mesh-distributed.
+
+    With a mesh, the batch is sharded over cfg.data_axes and statistics are
+    psum'd (the key-value-free reduce); without one, plain local computation.
+    The returned value is the FULL-DATA tight ELBO either way — sharded and
+    unsharded results agree (test_distributed.py).
+    """
+    axes = cfg.data_axes
+
+    def local(params, idx, y, w):
+        chol_kbb, linv = elbo_mod.whiten_operator(cfg.kernel_kind, params)
+        if cfg.task == "continuous":
+            wstats = stats_mod.sufficient_stats(
+                cfg.kernel_kind, params.kernel, params.factors, params.inducing,
+                idx, y, w, linv, chunk=cfg.chunk, backend=cfg.backend,
+            )
+            if mesh is not None:
+                wstats = _psum(wstats, axes)
+            return elbo_mod.elbo_continuous_whitened(params, wstats)
+        lam_w = chol_kbb.T @ jax.lax.stop_gradient(params.lam)
+        wstats, s_phi, _a5w = stats_mod.binary_stats(
+            cfg.kernel_kind, params.kernel, params.factors, params.inducing,
+            idx, y, lam_w, w, linv, chunk=cfg.chunk, backend=cfg.backend,
+        )
+        if mesh is not None:
+            wstats, s_phi = _psum((wstats, s_phi), axes)
+        return elbo_mod.elbo_binary_whitened(params, wstats, s_phi, lam_w)
+
+    return jax.jit(_shard(local, mesh, cfg, n_batch_args=3))
+
+
+def make_loss_and_grad(cfg: InferenceConfig, mesh: Mesh | None = None):
+    """negative-ELBO value_and_grad, jitted; the trainer's inner step."""
+    elbo_fn = make_elbo_fn(cfg, mesh)
+
+    def loss(params, idx, y, w):
+        return -elbo_fn(params, idx, y, w)
+
+    return jax.jit(jax.value_and_grad(loss))
+
+
+def make_lambda_update(cfg: InferenceConfig, mesh: Mesh | None = None):
+    """One distributed fixed-point update of lambda (Eq. 8).
+
+    Statistics (A1w, a5w) are computed shard-locally and psum'd; the p x p
+    solve is replicated (p ~ 100, negligible) — exactly the paper's layout
+    where the reducer finishes the tiny dense algebra.
+    """
+    axes = cfg.data_axes
+
+    def stats(params, lam_w, linv, idx, y, w):
+        wstats, _s_phi, a5w = stats_mod.binary_stats(
+            cfg.kernel_kind, params.kernel, params.factors, params.inducing,
+            idx, y, lam_w, w, linv, chunk=cfg.chunk, backend=cfg.backend,
+        )
+        out = (wstats.a1, a5w)
+        return _psum(out, axes) if mesh is not None else out
+
+    if mesh is not None:
+        spec = P(cfg.data_axes)
+        stats = jax.shard_map(
+            stats, mesh=mesh,
+            in_specs=(P(), P(), P(), spec, spec, spec), out_specs=P(),
+        )
+
+    @jax.jit
+    def update(params: DFNTFParams, idx, y, w) -> DFNTFParams:
+        chol_kbb, linv = elbo_mod.whiten_operator(cfg.kernel_kind, params)
+        lam_w = chol_kbb.T @ params.lam
+        a1w, a5w = stats(params, lam_w, linv, idx, y, w)
+        new_lam_w = elbo_mod.lam_step_whitened(a1w, a5w, lam_w)
+        # back to the raw basis: lam = L^{-T} lam_w
+        new_lam = jax.scipy.linalg.solve_triangular(
+            chol_kbb.T, new_lam_w, lower=False
+        )
+        return dataclasses.replace(params, lam=new_lam)
+
+    return update
+
+
+def make_stats_fn(cfg: InferenceConfig, mesh: Mesh | None = None):
+    """Global WHITENED SuffStats + chol(Kbb) — builds prediction caches."""
+    axes = cfg.data_axes
+
+    def stats(params, linv, idx, y, w):
+        out = stats_mod.sufficient_stats(
+            cfg.kernel_kind, params.kernel, params.factors, params.inducing,
+            idx, y, w, linv, chunk=cfg.chunk, backend=cfg.backend,
+        )
+        return _psum(out, axes) if mesh is not None else out
+
+    if mesh is not None:
+        spec = P(cfg.data_axes)
+        stats = jax.shard_map(
+            stats, mesh=mesh, in_specs=(P(), P(), spec, spec, spec), out_specs=P(),
+        )
+
+    @jax.jit
+    def run(params, idx, y, w):
+        chol_kbb, linv = elbo_mod.whiten_operator(cfg.kernel_kind, params)
+        return stats(params, linv, idx, y, w), chol_kbb
+
+    return run
+
+
+def shard_batch(mesh: Mesh, cfg: InferenceConfig, idx, y, w):
+    """Place a host batch with the entry dimension sharded over the data axes."""
+    spec = P(cfg.data_axes)
+    dev = lambda a: jax.device_put(a, NamedSharding(mesh, spec))
+    return dev(idx), dev(y), dev(w)

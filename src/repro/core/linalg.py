@@ -1,0 +1,96 @@
+"""Numerically-safe PSD linear algebra used throughout the GP core.
+
+All solves against kernel matrices go through a jittered Cholesky so the
+ELBO stays finite when the inducing points collapse during optimization.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# Sentinel: pick jitter by dtype.  f32 needs a much larger nugget than f64 —
+# the whitened-solve error grows with cond(Kbb), and 1e-4 relative jitter
+# bounds the condition number enough for f32 triangular solves (measured in
+# test_model_fit; see DESIGN.md numerical notes).
+DEFAULT_JITTER: float | None = None
+_JITTER_BY_DTYPE = {"float64": 1e-10, "float32": 1e-4}
+
+
+def resolve_jitter(jitter: float | None, dtype) -> float:
+    if jitter is not None:
+        return jitter
+    return _JITTER_BY_DTYPE.get(jnp.dtype(dtype).name, 1e-4)
+
+
+def add_jitter(mat: jax.Array, jitter: float | None = DEFAULT_JITTER) -> jax.Array:
+    """Add scaled jitter to the diagonal of a square matrix."""
+    n = mat.shape[-1]
+    jitter = resolve_jitter(jitter, mat.dtype)
+    scale = jnp.maximum(jnp.mean(jnp.diagonal(mat, axis1=-2, axis2=-1)), 1.0)
+    return mat + (jitter * scale) * jnp.eye(n, dtype=mat.dtype)
+
+
+def safe_cholesky(mat: jax.Array, jitter: float | None = DEFAULT_JITTER) -> jax.Array:
+    """Cholesky of a PSD matrix with diagonal jitter."""
+    return jnp.linalg.cholesky(add_jitter(mat, jitter))
+
+
+def chol_logdet(chol: jax.Array) -> jax.Array:
+    """log|A| from the Cholesky factor of A."""
+    return 2.0 * jnp.sum(jnp.log(jnp.diagonal(chol, axis1=-2, axis2=-1)), axis=-1)
+
+
+def chol_solve(chol: jax.Array, rhs: jax.Array) -> jax.Array:
+    """Solve A x = rhs given chol(A) (lower)."""
+    y = jax.scipy.linalg.solve_triangular(chol, rhs, lower=True)
+    return jax.scipy.linalg.solve_triangular(chol.T, y, lower=False)
+
+
+def psd_solve(mat: jax.Array, rhs: jax.Array, jitter: float = DEFAULT_JITTER) -> jax.Array:
+    return chol_solve(safe_cholesky(mat, jitter), rhs)
+
+
+def psd_logdet(mat: jax.Array, jitter: float = DEFAULT_JITTER) -> jax.Array:
+    return chol_logdet(safe_cholesky(mat, jitter))
+
+
+def whiten(chol: jax.Array, mat: jax.Array) -> jax.Array:
+    """L^{-1} M L^{-T} for symmetric M, given L = chol(A).
+
+    The whitened form I + beta * whiten(L, A1) is the numerically safe way to
+    factor Kbb + beta A1: its Cholesky has diagonal >= 1 regardless of beta,
+    where the direct factorization fails in f32 once beta gets large.
+    """
+    half = jax.scipy.linalg.solve_triangular(chol, mat, lower=True)
+    out = jax.scipy.linalg.solve_triangular(chol, half.T, lower=True)
+    return 0.5 * (out + out.T)  # re-symmetrize f32 roundoff
+
+
+def whiten_vec(chol: jax.Array, vec: jax.Array) -> jax.Array:
+    """L^{-1} v."""
+    return jax.scipy.linalg.solve_triangular(chol, vec, lower=True)
+
+
+def trace_solve(chol: jax.Array, mat: jax.Array) -> jax.Array:
+    """tr(A^{-1} M) given chol(A)."""
+    return jnp.trace(chol_solve(chol, mat))
+
+
+def quad_form_solve(chol: jax.Array, vec: jax.Array) -> jax.Array:
+    """v^T A^{-1} v given chol(A)."""
+    w = jax.scipy.linalg.solve_triangular(chol, vec, lower=True)
+    return jnp.sum(w * w)
+
+
+def triangular_inverse(chol: jax.Array) -> jax.Array:
+    """Explicit L^{-1} for a lower-triangular L.
+
+    Used to whiten kernel FEATURES inside the statistics pass:
+    phi = k(x, B) L^{-T} is a plain matmul (MXU-friendly, fuses into the
+    Pallas gram kernel) and makes the whitened gram sum_j phi phi^T PSD **by
+    construction** in any precision — whitening the summed A1 afterwards is
+    not (f32 roundoff scales with cond(Kbb) and beta).  With the default
+    relative jitter, cond(L) <= ~1e2, so the explicit inverse is safe.
+    """
+    eye = jnp.eye(chol.shape[-1], dtype=chol.dtype)
+    return jax.scipy.linalg.solve_triangular(chol, eye, lower=True)

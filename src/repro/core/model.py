@@ -1,0 +1,203 @@
+"""High-level DFNTF trainer: fit / predict over entry sets.
+
+Mirrors the paper's optimization procedure (§4.3.1):
+  * continuous: gradient-based optimization (Adam / GD / L-BFGS) of -L1*.
+  * binary: inner fixed-point loop on lambda (Eq. 8), outer gradient steps on
+    (U, B, kernel params) of -L2* — "before we calculate the gradients with
+    respect to U and B, we first optimize lambda using the fixed point
+    iteration".
+
+Works on a single device or a mesh (key-value-free psum aggregation); the two
+paths produce identical math (test_distributed.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+from repro import optim
+from repro.core import elbo as elbo_mod
+from repro.core import inference, predict
+from repro.core.elbo import DFNTFParams
+from repro.data.loader import pad_to_multiple
+from repro.data.tensor_store import EntrySet
+
+
+@dataclasses.dataclass(frozen=True)
+class FitConfig:
+    task: str = "continuous"  # "continuous" | "binary"
+    kernel_kind: str = "ard"
+    rank: int = 3
+    num_inducing: int = 100  # paper: p = 100
+    optimizer: str = "adam"  # "adam" | "gd" | "lbfgs"
+    learning_rate: float = 1e-2
+    steps: int = 200  # outer gradient steps (adam/gd)
+    lbfgs_max_iters: int = 100
+    fixed_point_iters: int = 5  # lambda inner loop per outer step (binary)
+    chunk: int | None = None
+    backend: str = "jnp"
+    factor_scale: float = 0.1
+    beta: float = 1.0
+    seed: int = 0
+    log_every: int = 50
+
+
+class DFNTF:
+    """Flexible GP tensor factorization (the paper's model)."""
+
+    def __init__(self, dims: tuple[int, ...], config: FitConfig, mesh: Mesh | None = None):
+        self.dims = tuple(dims)
+        self.config = config
+        self.mesh = mesh
+        self._icfg = inference.InferenceConfig(
+            kernel_kind=config.kernel_kind,
+            task=config.task,
+            chunk=config.chunk,
+            backend=config.backend,
+        )
+        self.params: DFNTFParams = elbo_mod.init_params(
+            jax.random.PRNGKey(config.seed),
+            self.dims,
+            config.rank,
+            num_inducing=config.num_inducing,
+            kernel_kind=config.kernel_kind,
+            factor_scale=config.factor_scale,
+            beta=config.beta,
+        )
+        self._cache: predict.PosteriorCache | None = None
+        self._train_batch = None
+
+    # ------------------------------------------------------------------ fit
+
+    def _num_shards(self) -> int:
+        return int(np.prod([self.mesh.shape[a] for a in self._icfg.data_axes])) if self.mesh else 1
+
+    def _prepare(self, train: EntrySet):
+        batch = pad_to_multiple(train, self._num_shards())
+        idx = jnp.asarray(batch.idx)
+        y = jnp.asarray(batch.y)
+        w = jnp.asarray(batch.w)
+        if self.mesh is not None:
+            idx, y, w = inference.shard_batch(self.mesh, self._icfg, idx, y, w)
+        return idx, y, w
+
+    def fit(self, train: EntrySet, verbose: bool = False) -> dict[str, Any]:
+        """Full-batch training as in the paper. Returns a history dict."""
+        idx, y, w = self._prepare(train)
+        self._train_batch = (idx, y, w)
+        cfg = self.config
+        if cfg.task == "binary":
+            # init inducing points near observed inputs helps the Probit model
+            pass
+        if cfg.optimizer == "lbfgs":
+            history = self._fit_lbfgs(idx, y, w, verbose)
+        else:
+            history = self._fit_sgd(idx, y, w, verbose)
+        self._refresh_cache(idx, y, w)
+        return history
+
+    def _fit_sgd(self, idx, y, w, verbose):
+        cfg = self.config
+        loss_grad = inference.make_loss_and_grad(self._icfg, self.mesh)
+        lam_update = (
+            inference.make_lambda_update(self._icfg, self.mesh)
+            if cfg.task == "binary"
+            else None
+        )
+        opt = (
+            optim.adam(cfg.learning_rate)
+            if cfg.optimizer == "adam"
+            else optim.sgd(cfg.learning_rate, momentum=0.9)
+        )
+        state = opt.init(self.params)
+        history = {"elbo": [], "time": []}
+        t0 = time.perf_counter()
+        params = self.params
+        for step in range(cfg.steps):
+            if lam_update is not None:
+                for _ in range(cfg.fixed_point_iters):
+                    params = lam_update(params, idx, y, w)
+            loss, grads = loss_grad(params, idx, y, w)
+            updates, state = opt.update(grads, state, params)
+            params = optim.apply_updates(params, updates)
+            if cfg.task == "binary":
+                # lambda is driven by the fixed point, not the gradient
+                params = dataclasses.replace(
+                    params, lam=jax.lax.stop_gradient(params.lam)
+                )
+            history["elbo"].append(-float(loss))
+            history["time"].append(time.perf_counter() - t0)
+            if verbose and step % cfg.log_every == 0:
+                print(f"step {step:5d}  elbo {-float(loss):.4f}")
+        self.params = params
+        return history
+
+    def _fit_lbfgs(self, idx, y, w, verbose):
+        cfg = self.config
+        elbo_fn = inference.make_elbo_fn(self._icfg, self.mesh)
+        lam_update = (
+            inference.make_lambda_update(self._icfg, self.mesh)
+            if cfg.task == "binary"
+            else None
+        )
+        params = self.params
+        history = {"elbo": [], "time": []}
+        t0 = time.perf_counter()
+        rounds = 5 if cfg.task == "binary" else 1
+        iters = max(cfg.lbfgs_max_iters // rounds, 1)
+        for _ in range(rounds):
+            if lam_update is not None:
+                for _ in range(cfg.fixed_point_iters):
+                    params = lam_update(params, idx, y, w)
+            lam_fixed = params.lam
+
+            def neg_elbo(p):
+                p = dataclasses.replace(p, lam=lam_fixed)
+                return -elbo_fn(p, idx, y, w)
+
+            res = optim.minimize(neg_elbo, params, max_iters=iters, tol=1e-7)
+            params = dataclasses.replace(res.params, lam=lam_fixed)
+            history["elbo"].append(-float(res.value))
+            history["time"].append(time.perf_counter() - t0)
+            if verbose:
+                print(f"lbfgs round: elbo {-float(res.value):.4f} iters {int(res.iterations)}")
+        self.params = params
+        return history
+
+    # -------------------------------------------------------------- predict
+
+    def _refresh_cache(self, idx, y, w):
+        stats_fn = inference.make_stats_fn(self._icfg, self.mesh)
+        wstats, chol_kbb = stats_fn(self.params, idx, y, w)
+        self._cache = predict.build_cache(
+            self.config.kernel_kind, self.params, wstats, chol_kbb,
+            task=self.config.task,
+        )
+
+    def predict(self, idx: np.ndarray) -> np.ndarray:
+        """Continuous: posterior mean of y."""
+        assert self._cache is not None, "call fit() first"
+        mean, _ = predict.predict_y_continuous(
+            self.config.kernel_kind, self.params, self._cache, jnp.asarray(idx)
+        )
+        return np.asarray(mean)
+
+    def predict_proba(self, idx: np.ndarray) -> np.ndarray:
+        """Binary: P(y = 1)."""
+        assert self._cache is not None, "call fit() first"
+        return np.asarray(
+            predict.predict_proba(
+                self.config.kernel_kind, self.params, self._cache, jnp.asarray(idx)
+            )
+        )
+
+    def elbo(self) -> float:
+        assert self._train_batch is not None
+        elbo_fn = inference.make_elbo_fn(self._icfg, self.mesh)
+        return float(elbo_fn(self.params, *self._train_batch))

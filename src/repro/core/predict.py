@@ -1,0 +1,99 @@
+"""Predictive posterior of the GP factorization model.
+
+With the optimal q(v) substituted, prediction at a new entry x* collapses to
+small closed forms (p x p solves only):
+
+  continuous:  m* = beta k(x*,B) (Kbb + beta A1)^{-1} a4
+               v* = k** - k*B [Kbb^{-1} - (Kbb + beta A1)^{-1}] k*B^T
+  binary:      f* mean = k(x*,B) lam*      (at the converged fixed point,
+               mu_v = Kbb lam*, hence k*B Kbb^{-1} mu_v = k*B lam*)
+               P(y*=1) = Phi(m* / sqrt(1 + v*))
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import gp, linalg
+from repro.core.elbo import DFNTFParams
+from repro.core.stats import SuffStats
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class PosteriorCache:
+    """Small precomputed solves shared across prediction batches.
+
+    Whitened representation (L = chol(Kbb), M = I + c L^-1 A1 L^-T with
+    c = beta for continuous, 1 for binary):
+      alpha  : predictive-mean weights, m* = k(x*, B) alpha
+      chol_kbb = L;  chol_m = chol(M)
+      v* = k** - ||L^-1 k*||^2 + ||chol_m^-1 L^-1 k*||^2
+    """
+
+    alpha: jax.Array  # [p]
+    chol_kbb: jax.Array  # [p, p]
+    chol_m: jax.Array  # [p, p]
+
+
+def build_cache(
+    kind: str,
+    params: DFNTFParams,
+    wstats: SuffStats,
+    chol_kbb: jax.Array,
+    task: str = "continuous",
+    jitter: float = linalg.DEFAULT_JITTER,
+) -> PosteriorCache:
+    """Build from WHITENED statistics (wstats.a1 = A1w, wstats.a4 = a4w)."""
+    p = chol_kbb.shape[0]
+    eye = jnp.eye(p, dtype=chol_kbb.dtype)
+    if task == "continuous":
+        beta = params.beta
+        chol_m = linalg.safe_cholesky(eye + beta * wstats.a1, jitter)
+        # alpha = beta (Kbb + beta A1)^{-1} a4 = beta L^{-T} M^{-1} a4w
+        alpha = beta * jax.scipy.linalg.solve_triangular(
+            chol_kbb.T, linalg.chol_solve(chol_m, wstats.a4), lower=False
+        )
+    elif task == "binary":
+        chol_m = linalg.safe_cholesky(eye + wstats.a1, jitter)
+        alpha = params.lam
+    else:
+        raise ValueError(f"unknown task {task!r}")
+    return PosteriorCache(alpha=alpha, chol_kbb=chol_kbb, chol_m=chol_m)
+
+
+@partial(jax.jit, static_argnames=("kind",))
+def predict_f(
+    kind: str, params: DFNTFParams, cache: PosteriorCache, idx: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    """Latent mean/variance at entries idx [N, K] -> ([N], [N])."""
+    xs = gp.gather_inputs(params.factors, idx)
+    kxb = gp.kernel_matrix(kind, params.kernel, xs, params.inducing)  # [N, p]
+    mean = kxb @ cache.alpha
+    # v* = k** - ||L^-1 k*||^2 + ||chol_m^-1 L^-1 k*||^2
+    w_kbb = jax.scipy.linalg.solve_triangular(cache.chol_kbb, kxb.T, lower=True)
+    w_m = jax.scipy.linalg.solve_triangular(cache.chol_m, w_kbb, lower=True)
+    kdiag = gp.kernel_diag(kind, params.kernel, xs)
+    var = kdiag - jnp.sum(w_kbb * w_kbb, axis=0) + jnp.sum(w_m * w_m, axis=0)
+    return mean, jnp.maximum(var, 1e-10)
+
+
+@partial(jax.jit, static_argnames=("kind",))
+def predict_y_continuous(
+    kind: str, params: DFNTFParams, cache: PosteriorCache, idx: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    """Observation-space mean/variance (adds noise 1/beta)."""
+    mean, var = predict_f(kind, params, cache, idx)
+    return mean, var + 1.0 / params.beta
+
+
+@partial(jax.jit, static_argnames=("kind",))
+def predict_proba(
+    kind: str, params: DFNTFParams, cache: PosteriorCache, idx: jax.Array
+) -> jax.Array:
+    """P(y=1) under the Probit link, marginalizing the latent Gaussian."""
+    mean, var = predict_f(kind, params, cache, idx)
+    return jax.scipy.stats.norm.cdf(mean / jnp.sqrt(1.0 + var))

@@ -1,0 +1,196 @@
+"""Additive sufficient statistics of the tight ELBOs (Theorems 4.1 / 4.2).
+
+Everything the bounds need from the data is a small, fixed-size sum over
+tensor entries:
+
+    A1 = sum_j w_j k(B, x_j) k(x_j, B)        [p, p]
+    a2 = sum_j w_j y_j^2                      []      (continuous only)
+    a3 = sum_j w_j k(x_j, x_j)                []
+    a4 = sum_j w_j k(B, x_j) y_j              [p]     (continuous only)
+    n  = sum_j w_j                            []
+
+This additivity IS the paper's separability argument: each mapper owns a
+shard of entries, computes the same fixed-size statistics, and the reducer
+just sums them (key-value-free MapReduce).  On TPU the "reducer" is a psum
+over the mesh's data axes (see core/inference.py).
+
+``w_j`` is an entry weight: 0 for padding (shards must be equal-sized under
+shard_map), arbitrary positive values for importance weighting of e.g.
+balanced zero/nonzero samples.  With w == 1 this is exactly the paper.
+
+Two interchangeable backends compute the same statistics:
+  * "jnp"    -- materializes K_SB per chunk (reference; always available)
+  * "pallas" -- fused Pallas TPU kernel, never materializes K_SB in HBM
+                (see repro/kernels/gp_gram)
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import gp
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class SuffStats:
+    """Additive sufficient statistics; a monoid under elementwise +."""
+
+    a1: jax.Array  # [p, p]
+    a2: jax.Array  # []
+    a3: jax.Array  # []
+    a4: jax.Array  # [p]
+    n: jax.Array  # [] effective number of entries (sum of weights)
+
+    def __add__(self, other: "SuffStats") -> "SuffStats":
+        return jax.tree.map(jnp.add, self, other)
+
+    @staticmethod
+    def zero(p: int, dtype=jnp.float32) -> "SuffStats":
+        z = jnp.zeros((), dtype)
+        return SuffStats(jnp.zeros((p, p), dtype), z, z, jnp.zeros((p,), dtype), z)
+
+
+def _features(kind, kp, xs, bs, whiten_inv):
+    """k(x, B), optionally whitened: phi = k(x, B) L^{-T}.
+
+    With whitening the gram sum_j w_j phi_j phi_j^T is PSD by construction,
+    which keeps chol(I + beta * gram) finite in f32 at any learned beta.
+    """
+    kxb = gp.kernel_matrix(kind, kp, xs, bs)  # [n, p]
+    if whiten_inv is not None:
+        kxb = kxb @ whiten_inv.T
+    return kxb
+
+
+def _chunk_stats_jnp(kind, kp, xs, bs, y, w, whiten_inv) -> SuffStats:
+    kxb = _features(kind, kp, xs, bs, whiten_inv)
+    kxb_w = kxb * w[:, None]
+    a1 = kxb.T @ kxb_w
+    a2 = jnp.sum(w * y * y)
+    a3 = jnp.sum(w * gp.kernel_diag(kind, kp, xs))
+    a4 = kxb_w.T @ y
+    return SuffStats(a1, a2, a3, a4, jnp.sum(w))
+
+
+def _chunk_stats(backend, kind, kp, xs, bs, y, w, whiten_inv) -> SuffStats:
+    if backend == "pallas":
+        # Imported lazily: the kernels package depends on this module's
+        # SuffStats container for its output pytree.
+        from repro.kernels.gp_gram import ops as gp_gram_ops
+
+        return gp_gram_ops.gram_stats(kind, kp, xs, bs, y, w, whiten_inv)
+    return _chunk_stats_jnp(kind, kp, xs, bs, y, w, whiten_inv)
+
+
+@partial(jax.jit, static_argnames=("kind", "chunk", "backend"))
+def sufficient_stats(
+    kind: str,
+    kp: gp.KernelParams,
+    factors: tuple[jax.Array, ...],
+    inducing: jax.Array,
+    idx: jax.Array,
+    y: jax.Array,
+    w: jax.Array | None = None,
+    whiten_inv: jax.Array | None = None,
+    *,
+    chunk: int | None = None,
+    backend: str = "jnp",
+) -> SuffStats:
+    """Compute SuffStats for a set of tensor entries.
+
+    idx: [N, K] per-entry mode indices;  y: [N] observed values;
+    w:   [N] weights (None -> ones).
+    whiten_inv: optional L^{-1} (L = chol(Kbb)); if given, a1/a4 are the
+           WHITENED statistics sum w phi phi^T / sum w phi y, phi = L^-1 k.
+    chunk: if set, scan over length-`chunk` microbatches (bounds peak memory
+           to O(chunk * p) instead of O(N * p)).  N must be divisible.
+    """
+    if w is None:
+        w = jnp.ones_like(y)
+    n = idx.shape[0]
+    if chunk is None or chunk >= n:
+        xs = gp.gather_inputs(factors, idx)
+        return _chunk_stats(backend, kind, kp, xs, inducing, y, w, whiten_inv)
+
+    if n % chunk != 0:
+        raise ValueError(f"N={n} not divisible by chunk={chunk}")
+
+    def body(acc: SuffStats, args) -> tuple[SuffStats, None]:
+        idx_c, y_c, w_c = args
+        xs_c = gp.gather_inputs(factors, idx_c)
+        return acc + _chunk_stats(backend, kind, kp, xs_c, inducing, y_c, w_c, whiten_inv), None
+
+    reshape = lambda a: a.reshape((n // chunk, chunk) + a.shape[1:])
+    init = SuffStats.zero(inducing.shape[0], dtype=inducing.dtype)
+    acc, _ = jax.lax.scan(body, init, (reshape(idx), reshape(y), reshape(w)))
+    return acc
+
+
+@partial(jax.jit, static_argnames=("kind", "chunk", "backend"))
+def binary_stats(
+    kind: str,
+    kp: gp.KernelParams,
+    factors: tuple[jax.Array, ...],
+    inducing: jax.Array,
+    idx: jax.Array,
+    y: jax.Array,
+    lam: jax.Array,
+    w: jax.Array | None = None,
+    whiten_inv: jax.Array | None = None,
+    *,
+    chunk: int | None = None,
+    backend: str = "jnp",
+) -> tuple[SuffStats, jax.Array, jax.Array]:
+    """Statistics for the binary bound: (SuffStats, s_phi, a5).
+
+    s_phi = sum_j w_j log Phi((2 y_j - 1) lam^T k(B, x_j))     []
+    a5    = sum_j w_j k(B,x_j) (2y_j-1) N(k^T lam)/Phi((2y_j-1) k^T lam)  [p]
+
+    a5 drives the fixed-point iteration (Eq. 8); s_phi enters L2* (Thm 4.2).
+    The a2/a4 slots of SuffStats are computed against y in {0,1}; the binary
+    bound does not read them.
+
+    With whiten_inv, features are whitened (phi = L^-1 k) and ``lam`` must be
+    given in the whitened basis, lam_w = L^T lam (then lam^T k == lam_w^T phi
+    and a5 comes back whitened: a5_w = L^-1 a5).
+    """
+    if w is None:
+        w = jnp.ones_like(y)
+
+    def chunk_fn(idx_c, y_c, w_c):
+        xs_c = gp.gather_inputs(factors, idx_c)
+        base = _chunk_stats(backend, kind, kp, xs_c, inducing, y_c, w_c, whiten_inv)
+        kxb = _features(kind, kp, xs_c, inducing, whiten_inv)  # [n, p]
+        sgn = 2.0 * y_c - 1.0
+        t = sgn * (kxb @ lam)
+        log_phi = jax.scipy.stats.norm.logcdf(t)
+        s_phi = jnp.sum(w_c * log_phi)
+        # N(t;0,1)/Phi(t) == exp(logpdf - logcdf), the inverse Mills ratio.
+        mills = jnp.exp(jax.scipy.stats.norm.logpdf(t) - log_phi)
+        a5 = kxb.T @ (w_c * sgn * mills)
+        return base, s_phi, a5
+
+    n = idx.shape[0]
+    if chunk is None or chunk >= n:
+        return chunk_fn(idx, y, w)
+    if n % chunk != 0:
+        raise ValueError(f"N={n} not divisible by chunk={chunk}")
+
+    def body(acc, args):
+        base, s_phi, a5 = chunk_fn(*args)
+        acc_base, acc_phi, acc_a5 = acc
+        return (acc_base + base, acc_phi + s_phi, acc_a5 + a5), None
+
+    reshape = lambda a: a.reshape((n // chunk, chunk) + a.shape[1:])
+    p = inducing.shape[0]
+    init = (
+        SuffStats.zero(p, dtype=inducing.dtype),
+        jnp.zeros((), inducing.dtype),
+        jnp.zeros((p,), inducing.dtype),
+    )
+    acc, _ = jax.lax.scan(body, init, (reshape(idx), reshape(y), reshape(w)))
+    return acc

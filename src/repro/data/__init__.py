@@ -1,0 +1,9 @@
+from repro.data.loader import Batch, minibatches, pad_to_multiple, token_batches
+from repro.data.synthetic import (
+    DATASET_SPECS, GroundTruth, make_dense_nonlinear_tensor, make_ground_truth,
+    make_sparse_tensor,
+)
+from repro.data.tensor_store import (
+    EntrySet, SparseTensor, balanced_train_test, kfold_split, random_entries,
+    sample_zero_entries,
+)

@@ -1,0 +1,92 @@
+"""Fixed-size, shard-able batch iteration over entry sets.
+
+Under shard_map every device must receive an equal-size slice, so batches are
+padded with zero-WEIGHT entries (the statistics in core/stats.py are weighted
+sums; w=0 rows contribute nothing — verified by test_zero_weight_padding).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator
+
+import numpy as np
+
+from repro.data.tensor_store import EntrySet
+
+
+@dataclasses.dataclass(frozen=True)
+class Batch:
+    idx: np.ndarray  # [B, K] int32
+    y: np.ndarray  # [B] float32
+    w: np.ndarray  # [B] float32 (0 = padding)
+
+
+def pad_to_multiple(entries: EntrySet, multiple: int) -> Batch:
+    """Whole-dataset batch padded so len % multiple == 0 (full-batch training,
+    as in the paper's L-BFGS/GD setting)."""
+    n = len(entries)
+    padded = ((n + multiple - 1) // multiple) * multiple
+    pad = padded - n
+    idx = np.concatenate([entries.idx, np.zeros((pad, entries.idx.shape[1]), np.int32)])
+    y = np.concatenate([entries.y, np.zeros(pad, np.float32)])
+    w = np.concatenate([np.ones(n, np.float32), np.zeros(pad, np.float32)])
+    return Batch(idx=idx.astype(np.int32), y=y.astype(np.float32), w=w)
+
+
+def token_batches(cfg, batch_size: int, seq_len: int, seed: int = 0) -> Iterator[dict]:
+    """Synthetic LM token stream for the model-zoo trainers.
+
+    Tokens follow a noisy affine recurrence x[t+1] = (a*x[t] + c) % V with 10%
+    uniform corruption — a next-token structure any of the zoo architectures
+    can learn (loss visibly decreases within tens of steps), with enough
+    entropy that it cannot be memorized from the embedding alone.
+    For VLM configs the batch also carries random patch embeddings and the
+    text span is shortened so text + frontend tokens == seq_len.
+    """
+    import jax.numpy as jnp  # local: keep module importable without jax
+
+    rng = np.random.default_rng(seed)
+    V = cfg.vocab_size
+    a, c = 31 % V or 1, 7 % V
+    text_len = seq_len - (cfg.frontend_tokens if cfg.modality == "vision" else 0)
+    while True:
+        x0 = rng.integers(0, V, size=(batch_size, 1))
+        xs = [x0]
+        for _ in range(text_len):
+            nxt = (a * xs[-1] + c) % V
+            corrupt = rng.random((batch_size, 1)) < 0.1
+            nxt = np.where(corrupt, rng.integers(0, V, size=(batch_size, 1)), nxt)
+            xs.append(nxt)
+        toks = np.concatenate(xs, axis=1)  # (B, text_len+1)
+        batch = {
+            "tokens": jnp.asarray(toks[:, :text_len], jnp.int32),
+        }
+        if cfg.modality == "vision":
+            patches = rng.normal(size=(batch_size, cfg.frontend_tokens, 1024)) * 0.02
+            batch["patch_embeds"] = jnp.asarray(patches, jnp.bfloat16)
+            labels = np.concatenate(
+                [np.zeros((batch_size, cfg.frontend_tokens), np.int64), toks[:, 1 : text_len + 1]], 1
+            )
+            mask = np.concatenate(
+                [np.zeros((batch_size, cfg.frontend_tokens)), np.ones((batch_size, text_len))], 1
+            )
+        else:
+            labels = toks[:, 1 : text_len + 1]
+            mask = np.ones((batch_size, text_len))
+        batch["labels"] = jnp.asarray(labels, jnp.int32)
+        batch["mask"] = jnp.asarray(mask, jnp.float32)
+        yield batch
+
+
+def minibatches(
+    entries: EntrySet, batch_size: int, rng: np.random.Generator, epochs: int | None = None
+) -> Iterator[Batch]:
+    """Shuffled fixed-size minibatches, final partial batch zero-weight padded."""
+    epoch = 0
+    while epochs is None or epoch < epochs:
+        shuffled = entries.shuffled(rng)
+        for start in range(0, len(shuffled), batch_size):
+            stop = min(start + batch_size, len(shuffled))
+            sl = EntrySet(shuffled.idx[start:stop], shuffled.y[start:stop])
+            yield pad_to_multiple(sl, batch_size)
+        epoch += 1

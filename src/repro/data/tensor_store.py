@@ -1,0 +1,177 @@
+"""Host-side sparse tensor storage and entry sampling.
+
+The paper's central data-selection idea: because the GP covariance has no
+Kronecker structure, training may use an ARBITRARY subset of tensor entries —
+in particular a *balanced* set of nonzeros plus an equal number of sampled
+zeros, which prevents the factorization from biasing toward the (meaningless)
+zero ocean.  This module implements that selection exactly as in §6.1:
+
+  * nonzero entries split into folds,
+  * zero entries sampled uniformly from the complement of the nonzero set,
+  * test-zeros and train-zeros kept disjoint.
+
+Entries are stored COO-style: ``idx`` [nnz, K] int32 and ``vals`` [nnz].
+Everything here is numpy (host); devices only ever see fixed-size batches.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class SparseTensor:
+    dims: tuple[int, ...]
+    idx: np.ndarray  # [nnz, K] int32
+    vals: np.ndarray  # [nnz] float32
+
+    def __post_init__(self):
+        assert self.idx.ndim == 2 and self.idx.shape[1] == len(self.dims)
+        assert self.vals.shape == (self.idx.shape[0],)
+
+    @property
+    def nnz(self) -> int:
+        return self.idx.shape[0]
+
+    @property
+    def num_modes(self) -> int:
+        return len(self.dims)
+
+    @property
+    def size(self) -> int:
+        return int(np.prod([float(d) for d in self.dims]))
+
+    @property
+    def density(self) -> float:
+        return self.nnz / float(np.prod([float(d) for d in self.dims]))
+
+    def flat_index(self, idx: np.ndarray) -> np.ndarray:
+        """Row-major linearized indices (int64; dims must fit)."""
+        flat = np.zeros(idx.shape[0], np.int64)
+        for k, d in enumerate(self.dims):
+            flat = flat * d + idx[:, k].astype(np.int64)
+        return flat
+
+
+def random_entries(rng: np.random.Generator, dims: tuple[int, ...], n: int) -> np.ndarray:
+    """n uniform entry indices (with replacement across the tensor)."""
+    return np.stack([rng.integers(0, d, size=n) for d in dims], axis=1).astype(np.int32)
+
+
+def sample_zero_entries(
+    rng: np.random.Generator,
+    tensor: SparseTensor,
+    n: int,
+    exclude_flat: np.ndarray | None = None,
+    max_rounds: int = 50,
+) -> np.ndarray:
+    """Sample n entry indices that are NOT in the nonzero set (rejection).
+
+    ``exclude_flat``: additional flat indices to avoid (e.g. test zeros so the
+    train/test zero sets stay disjoint, as in the paper's protocol).
+    """
+    forbidden = set(tensor.flat_index(tensor.idx).tolist())
+    if exclude_flat is not None:
+        forbidden |= set(np.asarray(exclude_flat).tolist())
+    out: list[np.ndarray] = []
+    got = 0
+    for _ in range(max_rounds):
+        cand = random_entries(rng, tensor.dims, max(2 * (n - got), 1024))
+        flat = tensor.flat_index(cand)
+        # de-dup within the draw and against forbidden
+        keep_mask = np.fromiter((f not in forbidden for f in flat), bool, len(flat))
+        cand, flat = cand[keep_mask], flat[keep_mask]
+        _, first = np.unique(flat, return_index=True)
+        cand, flat = cand[np.sort(first)], flat[np.sort(first)]
+        take = min(n - got, len(cand))
+        out.append(cand[:take])
+        forbidden |= set(flat[:take].tolist())
+        got += take
+        if got >= n:
+            break
+    if got < n:
+        raise RuntimeError(f"could not sample {n} zero entries ({got} found); tensor too dense")
+    return np.concatenate(out, axis=0)
+
+
+@dataclasses.dataclass(frozen=True)
+class EntrySet:
+    """A labelled set of tensor entries (inputs to the GP factorization)."""
+
+    idx: np.ndarray  # [N, K] int32
+    y: np.ndarray  # [N] float32
+
+    def __len__(self) -> int:
+        return self.idx.shape[0]
+
+    def shuffled(self, rng: np.random.Generator) -> "EntrySet":
+        perm = rng.permutation(len(self))
+        return EntrySet(self.idx[perm], self.y[perm])
+
+    def concat(self, other: "EntrySet") -> "EntrySet":
+        return EntrySet(
+            np.concatenate([self.idx, other.idx]), np.concatenate([self.y, other.y])
+        )
+
+
+def kfold_split(
+    rng: np.random.Generator, tensor: SparseTensor, folds: int = 5
+) -> list[tuple[np.ndarray, np.ndarray]]:
+    """Split nonzero entries into (train_rows, test_rows) per fold (§6.1)."""
+    perm = rng.permutation(tensor.nnz)
+    parts = np.array_split(perm, folds)
+    out = []
+    for f in range(folds):
+        test = parts[f]
+        train = np.concatenate([parts[g] for g in range(folds) if g != f])
+        out.append((train, test))
+    return out
+
+
+def balanced_train_test(
+    rng: np.random.Generator,
+    tensor: SparseTensor,
+    train_rows: np.ndarray,
+    test_rows: np.ndarray,
+    test_zero_fraction: float = 0.001,
+    train_zero_ratio: float = 1.0,
+    binary: bool = False,
+) -> tuple[EntrySet, EntrySet]:
+    """Paper §6.1 protocol.
+
+    Test: the held-out nonzeros + `test_zero_fraction` of the tensor volume as
+    zeros (capped at 10x the test nonzeros to keep AUC meaningful).
+    Train: train nonzeros + `train_zero_ratio` x as many sampled zeros,
+    disjoint from the test zeros.
+    """
+    n_test_zeros = int(min(tensor.size * test_zero_fraction, 10 * len(test_rows)))
+    n_test_zeros = max(n_test_zeros, len(test_rows))
+    test_zero_idx = sample_zero_entries(rng, tensor, n_test_zeros)
+    test = EntrySet(
+        np.concatenate([tensor.idx[test_rows], test_zero_idx]),
+        np.concatenate(
+            [
+                np.ones(len(test_rows), np.float32)
+                if binary
+                else tensor.vals[test_rows].astype(np.float32),
+                np.zeros(n_test_zeros, np.float32),
+            ]
+        ),
+    )
+    n_train_zeros = int(train_zero_ratio * len(train_rows))
+    train_zero_idx = sample_zero_entries(
+        rng, tensor, n_train_zeros, exclude_flat=tensor.flat_index(test_zero_idx)
+    )
+    train = EntrySet(
+        np.concatenate([tensor.idx[train_rows], train_zero_idx]),
+        np.concatenate(
+            [
+                np.ones(len(train_rows), np.float32)
+                if binary
+                else tensor.vals[train_rows].astype(np.float32),
+                np.zeros(n_train_zeros, np.float32),
+            ]
+        ),
+    )
+    return train.shuffled(rng), test.shuffled(rng)

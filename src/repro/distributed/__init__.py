@@ -1,0 +1,8 @@
+from repro.distributed.sharding import (
+    activation_spec,
+    batch_shardings,
+    cache_shardings,
+    make_constrainer,
+    param_shardings,
+    sanitize_spec,
+)

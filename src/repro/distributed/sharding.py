@@ -1,0 +1,178 @@
+"""Sharding rules: one table mapping every parameter / activation / cache
+tensor to a PartitionSpec over the production mesh axes.
+
+Conventions (DESIGN.md §4):
+  * ``pod``, ``data`` — pure data parallelism.  Batch-like dims shard here.
+    Weights are additionally FSDP-sharded over ``data`` (their d_model-like
+    dim), all-gathered at use by GSPMD (or manually inside the MoE
+    shard_map interior).  Gradients reduce over (pod, data) — the TPU-native
+    form of the paper's key-value-free full-vector reduce.
+  * ``model`` — tensor parallelism: attention heads / FFN hidden / vocab.
+
+Every rule passes through :func:`sanitize_spec`, which drops any axis that
+does not divide the corresponding dim (e.g. GQA kv-heads < |model|, batch=1
+decode) — the config stays valid for every (arch × shape × mesh) without
+per-case tables.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.models.moe import moe_param_specs
+
+DATA_AXES = ("pod", "data")
+
+
+def _dp(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in DATA_AXES if a in mesh.axis_names)
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        n = 1
+        for a in axis:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[axis]
+
+
+def sanitize_spec(spec: P, shape: tuple[int, ...], mesh: Mesh) -> P:
+    """Drop spec axes that don't divide the dim (replicate instead)."""
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    for dim, axis in zip(shape, entries):
+        if axis is not None and dim % _axis_size(mesh, axis) == 0 and dim > 0:
+            out.append(axis)
+        else:
+            out.append(None)
+    return P(*out)
+
+
+# ------------------------------------------------------------- parameters
+
+
+def _param_rule(path: tuple[str, ...], leaf, cfg) -> P:
+    """PartitionSpec for one parameter leaf, by name + rank.
+
+    Stacked layer params have a leading L dim (never sharded).
+    """
+    name = path[-1]
+    stacked = "layers" in path
+    nd = leaf.ndim - (1 if stacked else 0)  # rank without the L dim
+
+    moe_specs = moe_param_specs(cfg) if cfg.num_experts else {}
+    if name in moe_specs:
+        body = moe_specs[name]
+    elif name == "embed":
+        body = P("model", "data")  # vocab x d_model
+    elif name == "vision_proj":
+        body = P("data", "model")
+    elif name in ("wq", "wk", "wv", "w_gate", "w_up"):
+        body = P("data", "model")  # d_model x (heads*hd | d_ff)
+    elif name in ("wo", "w_down"):
+        body = P("model", "data")
+    elif name == "w_in":  # mamba in-proj: d_model x inner
+        body = P("data", "model")
+    elif name == "w_out":  # mamba out-proj: inner x d_model
+        body = P("model", "data")
+    elif name in ("bq",):
+        body = P("model")
+    elif nd <= 1:
+        body = P(None)  # norms, biases, A_log, D, dt_bias, conv
+    else:
+        body = P(*([None] * nd))
+    if stacked:
+        body = P(None, *body)
+    return body
+
+
+def param_shardings(params_shape: Any, cfg, mesh: Mesh):
+    """NamedSharding pytree matching a params (shape) pytree."""
+    no_fsdp = getattr(cfg, "no_fsdp", False)
+
+    def rule(path, leaf):
+        names = tuple(p.key for p in path if hasattr(p, "key"))
+        spec = _param_rule(names, leaf, cfg)
+        if no_fsdp:  # §Perf lever: replicate weights over the data axis
+            spec = P(*[None if a == "data" else a for a in spec])
+        return NamedSharding(mesh, sanitize_spec(spec, leaf.shape, mesh))
+
+    return jax.tree_util.tree_map_with_path(rule, params_shape)
+
+
+# ------------------------------------------------------------ activations
+
+_ACT_RULES = {
+    # kind -> spec builder(dp)
+    "act": lambda dp: P(dp, None, None),  # (B,S,D)
+    "q_proj": lambda dp: P(dp, None, "model"),  # (B,S,H*hd)
+    "kv_proj": lambda dp: P(dp, None, "model"),  # (B,S,Hk*hd)
+    "ffn": lambda dp: P(dp, None, "model"),  # (B,S,F)
+    "logits": lambda dp: P(dp, None, "model"),  # (B,S,V)
+    "ssm_x": lambda dp: P(dp, None, "model", None),  # (B,S,H,P)
+    # gathered (use-site) weight forms: replicated over data, TP over model.
+    # Constraining the bf16 copy here makes GSPMD cast BEFORE the FSDP
+    # all-gather (§Perf lever: bf16_weight_gather).
+    "w_col": lambda dp: P(None, "model"),  # (D, F)-like
+    "w_row": lambda dp: P("model", None),  # (F, D)-like
+    "w_embed": lambda dp: P("model", None),  # (V, D)
+}
+
+
+def activation_spec(kind: str, mesh: Mesh) -> P:
+    return _ACT_RULES[kind](_dp(mesh))
+
+
+def make_constrainer(mesh: Mesh | None):
+    """Returns constrain(x, kind) for lm_forward/lm_decode_step."""
+    if mesh is None:
+        return lambda x, kind: x
+
+    def constrain(x, kind):
+        spec = sanitize_spec(activation_spec(kind, mesh), x.shape, mesh)
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+    return constrain
+
+
+# -------------------------------------------------------- batches / caches
+
+
+def batch_shardings(batch_shape: Any, mesh: Mesh):
+    """Shard every batch leaf's leading (batch) dim over (pod, data)."""
+    dp = _dp(mesh)
+
+    def rule(leaf):
+        spec = P(dp, *([None] * (leaf.ndim - 1)))
+        return NamedSharding(mesh, sanitize_spec(spec, leaf.shape, mesh))
+
+    return jax.tree.map(rule, batch_shape)
+
+
+def cache_shardings(cache_shape: Any, cfg, mesh: Mesh):
+    """KV caches: (L, B, S, Hk, hd) — batch over (pod,data), seq over model
+    (distributed-softmax decode attention).  SSM states: (L, B, H, P, N) —
+    batch over (pod,data), heads over model.  Falls back to replication per
+    dim via sanitize."""
+    dp = _dp(mesh)
+
+    def rule(path, leaf):
+        names = tuple(p.key for p in path if hasattr(p, "key"))
+        if "ssm" in names and leaf.ndim == 5:  # (L,B,H,P,N) state
+            spec = P(None, dp, "model", None, None)
+        elif "ssm" in names:  # (L,B,K,conv) conv window
+            spec = P(None, dp, None, None)
+        elif leaf.ndim == 5:  # (L,B,S,Hk,hd) kv cache
+            spec = P(None, dp, "model", None, None)
+        else:
+            spec = P(*([None] * leaf.ndim))
+        return NamedSharding(mesh, sanitize_spec(spec, leaf.shape, mesh))
+
+    return jax.tree_util.tree_map_with_path(rule, cache_shape)

@@ -1,0 +1,151 @@
+"""Blocked (flash) attention Pallas TPU kernel, causal + sliding-window.
+
+TPU re-blocking of the attention hot loop (the model zoo's prefill/train
+compute peak).  The (S x S) score matrix never exists in HBM:
+
+  HBM -> VMEM : one (Bq x hd) query block; (Bk x hd) K/V blocks stream
+  MXU         : s = q @ k^T                  (Bq x Bk)
+  VPU         : online softmax (running max m, normalizer l, rescale)
+  MXU         : acc += p @ v                 (Bq x hd)
+
+Grid is (batch, q_heads, q_blocks, kv_blocks) with kv innermost; the output
+block is revisited across the kv dimension (standard accumulation pattern)
+with f32 scratch accumulators.  Causal/sliding-window blocks that are fully
+masked are skipped with ``pl.when`` — the MXU never sees them, so SWA cost
+is O(S*W) like the jnp oracle.
+
+GQA folds the q-head -> kv-head mapping into the K/V index_map (h // group),
+so kv blocks are fetched once per group from the same HBM buffer.
+
+Layout: (B, H, S, hd) — heads-major so a block is a contiguous (S, hd) tile.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(
+    q_ref,  # [1, 1, Bq, hd]
+    k_ref,  # [1, 1, Bk, hd]
+    v_ref,  # [1, 1, Bk, hd]
+    o_ref,  # [1, 1, Bq, hd]
+    m_ref,  # scratch [Bq, 1] f32 running max
+    l_ref,  # scratch [Bq, 1] f32 running normalizer
+    acc_ref,  # scratch [Bq, hd] f32
+    *,
+    causal: bool,
+    window: int,
+    block_q: int,
+    block_kv: int,
+    sm_scale: float,
+    kv_blocks: int,
+):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = iq * block_q
+    k_start = ik * block_kv
+    # block-level reachability: any (qpos >= kpos) and (qpos - kpos < window)?
+    reachable = True
+    if causal:
+        reachable = q_start + block_q - 1 >= k_start
+    if window > 0:
+        reachable = jnp.logical_and(
+            reachable, (q_start - (k_start + block_kv - 1)) < window
+        )
+
+    @pl.when(reachable)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)
+        k = k_ref[0, 0].astype(jnp.float32)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * sm_scale  # [Bq, Bk]
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_kv), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_kv), 1)
+        mask = jnp.ones((block_q, block_kv), jnp.bool_)
+        if causal:
+            mask &= qpos >= kpos
+        if window > 0:
+            mask &= (qpos - kpos) < window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]  # [Bq, 1]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)  # fully-masked rows: exp(NEG_INF - NEG_INF)=1 guarded below
+        p = jnp.where(mask, p, 0.0)
+        alpha = jnp.exp(m_prev - m_new)  # [Bq, 1]
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_ref[...] = m_new
+
+    @pl.when(ik == kv_blocks - 1)
+    def _finalize():
+        l = l_ref[...]
+        norm = jnp.where(l > 0.0, 1.0 / jnp.maximum(l, 1e-30), 0.0)
+        o_ref[0, 0, :, :] = (acc_ref[...] * norm).astype(o_ref.dtype)
+
+
+def flash_attention_bhsd(
+    q: jax.Array,  # (B, H, S, hd)
+    k: jax.Array,  # (B, Hk, S, hd)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    block_q: int = 128,
+    block_kv: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    B, H, S, hd = q.shape
+    Hk = k.shape[1]
+    assert H % Hk == 0, (H, Hk)
+    group = H // Hk
+    block_q = min(block_q, S)
+    block_kv = min(block_kv, S)
+    assert S % block_q == 0 and S % block_kv == 0, (S, block_q, block_kv)
+    nq, nk = S // block_q, S // block_kv
+
+    kernel = functools.partial(
+        _attn_kernel,
+        causal=causal,
+        window=window,
+        block_q=block_q,
+        block_kv=block_kv,
+        sm_scale=1.0 / math.sqrt(hd),
+        kv_blocks=nk,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, hd), lambda b, h, iq, ik: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, block_kv, hd), lambda b, h, iq, ik: (b, h // group, ik, 0)),
+            pl.BlockSpec((1, 1, block_kv, hd), lambda b, h, iq, ik: (b, h // group, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, hd), lambda b, h, iq, ik: (b, h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, S, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,56 @@
+"""jit'd public wrapper for the flash attention kernel.
+
+Accepts the model-zoo layout (B, S, H, hd), transposes to the kernel's
+heads-major layout, pads the sequence up to the block size, and dispatches
+to either the Pallas kernel (TPU target; interpret=True executes the kernel
+body in Python on CPU for validation) or the jnp oracle.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_bhsd
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+def _round_up(v: int, m: int) -> int:
+    return (v + m - 1) // m * m
+
+
+@partial(
+    jax.jit,
+    static_argnames=("causal", "window", "block_q", "block_kv", "interpret", "use_ref"),
+)
+def flash_attention(
+    q: jax.Array,  # (B, S, H, hd)
+    k: jax.Array,  # (B, S, Hk, hd)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    block_q: int = 128,
+    block_kv: int = 128,
+    interpret: bool = False,
+    use_ref: bool = False,
+) -> jax.Array:
+    B, S, H, hd = q.shape
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    if use_ref:
+        out = attention_ref(qt, kt, vt, causal=causal, window=window)
+        return out.transpose(0, 2, 1, 3)
+
+    Sp = _round_up(S, max(block_q, block_kv))
+    if Sp != S:
+        pad = [(0, 0), (0, 0), (0, Sp - S), (0, 0)]
+        qt, kt, vt = (jnp.pad(t, pad) for t in (qt, kt, vt))
+    out = flash_attention_bhsd(
+        qt, kt, vt,
+        causal=causal, window=window,
+        block_q=block_q, block_kv=block_kv, interpret=interpret,
+    )
+    return out[:, :, :S].transpose(0, 2, 1, 3)

@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the flash attention kernel (naive masked softmax)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0) -> jax.Array:
+    """q: (B,H,S,hd); k/v: (B,Hk,S,hd) -> (B,H,S,hd).  f32 softmax."""
+    B, H, S, hd = q.shape
+    Hk = k.shape[1]
+    g = H // Hk
+    qf = q.astype(jnp.float32).reshape(B, Hk, g, S, hd)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qf, k.astype(jnp.float32)) / math.sqrt(hd)
+    i, j = jnp.arange(S)[:, None], jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= i >= j
+    if window > 0:
+        mask &= i - j < window
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    # fully-masked rows (can't happen causally, but keep the oracle total)
+    p = jnp.where(mask.any(axis=-1)[None, None, None, :, None], p, 0.0)
+    o = jnp.einsum("bhgqk,bhkd->bhgqd", p, v.astype(jnp.float32))
+    return o.reshape(B, H, S, hd).astype(q.dtype)

@@ -1,0 +1,147 @@
+"""Fused ARD/RBF cross-covariance + gram-accumulation Pallas TPU kernel.
+
+The paper's per-mapper hot loop is: for each tensor entry j, compute the
+p-vector k(B, x_j) and accumulate A1 += k k^T, a4 += k y_j, a3 += k(x_j,x_j).
+A naive implementation materializes K_SB (N x p) in HBM and then runs a GEMM
+— 2x HBM traffic on the largest intermediate.  This kernel re-blocks the loop
+for the TPU memory hierarchy:
+
+  HBM -> VMEM : one (TN x D) tile of scaled inputs per grid step
+  MXU         : cross = tile @ B^T          (TN x P)
+  VPU         : r2 -> correlation -> k      (elementwise, in VMEM)
+  MXU         : k = k @ W^T                 (optional feature whitening)
+  MXU         : A1 += k^T (w * k);  a4 += k^T (w y)
+
+K_SB never exists in HBM; the only HBM traffic is the input tile stream and
+the fixed-size (P x P) accumulators.  Accumulation across grid steps uses the
+revisiting-output pattern (all steps map to output block (0, 0)), with f32
+accumulators regardless of the input dtype.
+
+Weights w encode zero-padding (w=0 rows contribute nothing), so callers can
+pad N up to the tile size with no semantic change.  A column mask kills
+padded inducing columns (P is padded to the lane width, 128).  The kernel
+amplitude amp^2 is a traced (1,1) scalar input so hyper-parameter training
+does not recompile.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _dot_f32(a, b):
+    return jax.lax.dot_general(
+        a, b, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+
+def _correlation(kind: str, r2):
+    if kind in ("rbf", "ard"):
+        return jnp.exp(-0.5 * r2)
+    r = jnp.sqrt(r2 + 1e-12)
+    if kind == "matern32":
+        s = jnp.sqrt(3.0).astype(r.dtype) * r
+        return (1.0 + s) * jnp.exp(-s)
+    if kind == "matern52":
+        s = jnp.sqrt(5.0).astype(r.dtype) * r
+        return (1.0 + s + s * s / 3.0) * jnp.exp(-s)
+    raise ValueError(f"unsupported kernel kind {kind!r}")
+
+
+def _gram_kernel(
+    # inputs (VMEM refs)
+    xs_ref,  # [TN, D]   scaled inputs tile
+    x2_ref,  # [TN, 1]   per-row squared norm
+    bs_ref,  # [P, D]    scaled inducing points (replicated each step)
+    b2_ref,  # [1, P]    per-inducing squared norm
+    y_ref,  # [TN, 1]
+    w_ref,  # [TN, 1]
+    kd_ref,  # [TN, 1]   kernel diagonal k(x, x)
+    mask_ref,  # [1, P]  1 for real inducing columns, 0 for padding
+    wmat_ref,  # [P, P]  whitening matrix W (k <- k @ W^T); identity if unused
+    amp2_ref,  # [1, 1]  kernel amplitude^2 (traced hyper-parameter)
+    # outputs (accumulated across grid steps)
+    a1_ref,  # [P, P]
+    a2_ref,  # [1, 1]
+    a3_ref,  # [1, 1]
+    a4_ref,  # [1, P]
+    n_ref,  # [1, 1]
+    *,
+    kind: str,
+):
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        a1_ref[...] = jnp.zeros_like(a1_ref)
+        a2_ref[...] = jnp.zeros_like(a2_ref)
+        a3_ref[...] = jnp.zeros_like(a3_ref)
+        a4_ref[...] = jnp.zeros_like(a4_ref)
+        n_ref[...] = jnp.zeros_like(n_ref)
+
+    xs = xs_ref[...]
+    bs = bs_ref[...]
+    w = w_ref[...].astype(jnp.float32)  # [TN, 1]
+    y = y_ref[...].astype(jnp.float32)
+    amp2 = amp2_ref[0, 0].astype(jnp.float32)
+
+    if kind == "linear":
+        k = amp2 * _dot_f32(xs, bs.T)
+    else:
+        cross = _dot_f32(xs, bs.T)  # [TN, P] f32
+        r2 = (
+            x2_ref[...].astype(jnp.float32)
+            + b2_ref[...].astype(jnp.float32)
+            - 2.0 * cross
+        )
+        r2 = jnp.maximum(r2, 0.0)
+        k = amp2 * _correlation(kind, r2)
+    k = k * mask_ref[...].astype(jnp.float32)  # kill padded inducing columns
+    k = _dot_f32(k, wmat_ref[...].astype(jnp.float32).T)  # optional whitening
+    kw = k * w  # [TN, P]
+
+    a1_ref[...] += _dot_f32(k.T, kw)
+    a4_ref[...] += _dot_f32((y * w).T, k)  # [1, P]
+    a2_ref[...] += jnp.sum(w * y * y).reshape(1, 1)
+    a3_ref[...] += jnp.sum(w * kd_ref[...].astype(jnp.float32)).reshape(1, 1)
+    n_ref[...] += jnp.sum(w).reshape(1, 1)
+
+
+def gram_pallas_call(n: int, p: int, d: int, tile_n: int, kind: str, interpret: bool):
+    """Build the pallas_call for given static shapes."""
+    grid = (n // tile_n,)
+    f32 = jnp.float32
+    return pl.pallas_call(
+        functools.partial(_gram_kernel, kind=kind),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_n, d), lambda i: (i, 0)),  # xs
+            pl.BlockSpec((tile_n, 1), lambda i: (i, 0)),  # x2
+            pl.BlockSpec((p, d), lambda i: (0, 0)),  # bs
+            pl.BlockSpec((1, p), lambda i: (0, 0)),  # b2
+            pl.BlockSpec((tile_n, 1), lambda i: (i, 0)),  # y
+            pl.BlockSpec((tile_n, 1), lambda i: (i, 0)),  # w
+            pl.BlockSpec((tile_n, 1), lambda i: (i, 0)),  # kdiag
+            pl.BlockSpec((1, p), lambda i: (0, 0)),  # mask
+            pl.BlockSpec((p, p), lambda i: (0, 0)),  # whitening matrix
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),  # amp2
+        ],
+        out_specs=[
+            pl.BlockSpec((p, p), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, p), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((p, p), f32),
+            jax.ShapeDtypeStruct((1, 1), f32),
+            jax.ShapeDtypeStruct((1, 1), f32),
+            jax.ShapeDtypeStruct((1, p), f32),
+            jax.ShapeDtypeStruct((1, 1), f32),
+        ],
+        interpret=interpret,
+    )

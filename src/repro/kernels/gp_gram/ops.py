@@ -1,0 +1,127 @@
+"""jit'd wrapper around the fused gram kernel: padding, scaling, masking, VJP.
+
+``gram_stats`` is the drop-in 'pallas' backend for core/stats (same contract
+as the jnp path, verified against ref.py).  Details:
+
+  * P (inducing) is padded to the TPU lane width (128) and masked;
+    N (entries) is padded to the tile size with zero-weight rows.
+  * Pallas kernels are not auto-differentiable, so gram_stats carries a
+    custom VJP whose backward pass is the jax.vjp of the pure-jnp reference
+    (recompute; same statistics, so gradients are exact).  The fused forward
+    is what the inference hot paths need most — the lambda fixed-point loop
+    and prediction are forward-only.
+  * On non-TPU backends the kernel runs in interpret mode (Python emulation)
+    so the whole path is testable on CPU.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import gp
+from repro.core.stats import SuffStats
+from repro.kernels.gp_gram import ref
+from repro.kernels.gp_gram.kernel import gram_pallas_call
+
+LANE = 128
+
+
+def _pad_to(x: jax.Array, size: int, axis: int) -> jax.Array:
+    pad = size - x.shape[axis]
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def _round_up(v: int, m: int) -> int:
+    return ((v + m - 1) // m) * m
+
+
+def _forward(kind, tile_n, interpret, kp, xs, bs, y, w, whiten_inv) -> SuffStats:
+    n, d = xs.shape
+    p = bs.shape[0]
+    dtype = xs.dtype
+
+    # lengthscale scaling happens outside the kernel (fuses into the gather);
+    # amplitude^2 is a traced (1,1) input.
+    ls = kp.lengthscale
+    xs_s = (xs / ls).astype(dtype)
+    bs_s = (bs / ls).astype(dtype)
+    kdiag = gp.kernel_diag(kind, kp, xs)
+    amp2 = jnp.reshape(kp.amplitude2, (1, 1)).astype(dtype)
+
+    p_pad = _round_up(p, LANE)
+    n_pad = _round_up(n, tile_n)
+    tile = min(tile_n, n_pad)
+
+    xs_s = _pad_to(xs_s, n_pad, 0)
+    x2 = jnp.sum(xs_s * xs_s, axis=1, keepdims=True)
+    bs_p = _pad_to(bs_s, p_pad, 0)
+    b2 = jnp.sum(bs_p * bs_p, axis=1)[None, :]
+    y_p = _pad_to(y.astype(dtype)[:, None], n_pad, 0)
+    w_p = _pad_to(w.astype(dtype)[:, None], n_pad, 0)
+    kd_p = _pad_to(kdiag.astype(dtype)[:, None], n_pad, 0)
+    mask = (jnp.arange(p_pad) < p).astype(dtype)[None, :]
+    if whiten_inv is not None:
+        wmat = _pad_to(_pad_to(whiten_inv.astype(dtype), p_pad, 0), p_pad, 1)
+        wmat = wmat + jnp.diag((jnp.arange(p_pad) >= p).astype(dtype))
+    else:
+        wmat = jnp.eye(p_pad, dtype=dtype)
+
+    call = gram_pallas_call(n_pad, p_pad, d, tile, kind, interpret)
+    a1, a2, a3, a4, n_out = call(
+        xs_s, x2, bs_p, b2, y_p, w_p, kd_p, mask, wmat, amp2
+    )
+    return SuffStats(
+        a1=a1[:p, :p].astype(dtype),
+        a2=a2[0, 0].astype(dtype),
+        a3=a3[0, 0].astype(dtype),
+        a4=a4[0, :p].astype(dtype),
+        n=n_out[0, 0].astype(dtype),
+    )
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2))
+def _gram_stats(kind, tile_n, interpret, kp, xs, bs, y, w, whiten_inv):
+    return _forward(kind, tile_n, interpret, kp, xs, bs, y, w, whiten_inv)
+
+
+def _gram_fwd(kind, tile_n, interpret, kp, xs, bs, y, w, whiten_inv):
+    out = _forward(kind, tile_n, interpret, kp, xs, bs, y, w, whiten_inv)
+    return out, (kp, xs, bs, y, w, whiten_inv)
+
+
+def _gram_bwd(kind, tile_n, interpret, residuals, ct: SuffStats):
+    kp, xs, bs, y, w, whiten_inv = residuals
+    _, vjp = jax.vjp(
+        lambda kp_, xs_, bs_, y_, w_, wi_: ref.gram_stats_ref(
+            kind, kp_, xs_, bs_, y_, w_, wi_
+        ),
+        kp, xs, bs, y, w, whiten_inv,
+    )
+    return vjp(ct)
+
+
+_gram_stats.defvjp(_gram_fwd, _gram_bwd)
+
+
+def gram_stats(
+    kind: str,
+    kp: gp.KernelParams,
+    xs: jax.Array,
+    bs: jax.Array,
+    y: jax.Array,
+    w: jax.Array,
+    whiten_inv: jax.Array | None = None,
+    *,
+    tile_n: int = 512,
+    interpret: bool | None = None,
+) -> SuffStats:
+    """Fused SuffStats for ALREADY-GATHERED inputs xs [N, D]."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return _gram_stats(kind, tile_n, bool(interpret), kp, xs, bs, y, w, whiten_inv)

@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the fused gram kernel (shared with core/stats)."""
+from __future__ import annotations
+
+import jax
+
+from repro.core import gp
+from repro.core.stats import SuffStats, _chunk_stats_jnp
+
+
+def gram_stats_ref(
+    kind: str,
+    kp: gp.KernelParams,
+    xs: jax.Array,
+    bs: jax.Array,
+    y: jax.Array,
+    w: jax.Array,
+    whiten_inv: jax.Array | None = None,
+) -> SuffStats:
+    """Reference: materialize K_xB, then reduce.  The semantics the Pallas
+    kernel must reproduce (up to f32 reassociation)."""
+    return _chunk_stats_jnp(kind, kp, xs, bs, y, w, whiten_inv)

@@ -1,0 +1,314 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production mesh WITHOUT hardware, and extract the roofline terms.
+
+The two lines above MUST run before any other import (jax locks the device
+count at first init).  This module is the ONLY place that forces 512 host
+devices — smoke tests and benchmarks see the real single CPU device.
+
+Two passes per (arch x shape):
+
+  scan pass   — the production program (lax.scan over layers, grad
+    accumulation): full depth, both meshes.  Proves lowering/compiling
+    succeeds and yields memory_analysis (the "fits" proof).  NOT used for
+    flops/collective accounting: XLA's HloCostAnalysis counts a while body
+    ONCE regardless of trip count.
+
+  probe pass  — two SHALLOW LAYER-UNROLLED compiles (depths 2 and 4;
+    hybrid archs use (k, 2k) so the shared-block cadence stays uniform),
+    used for COLLECTIVE-byte extraction only.  Unrolled layers are
+    structurally identical, so collective bytes are exactly linear in
+    depth: bytes(L) = base + slope*L.  FLOPs/HBM bytes come from the
+    analytic op model instead (roofline/analytic.py), calibrated against
+    fully-unrolled HLO (tests/test_roofline.py + full 28/52-layer unrolls
+    of qwen3-0.6b / granite-20b; see EXPERIMENTS.md §Dry-run methodology).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-0.6b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all              # 40 pairs, single-pod
+  PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod  # 512-chip pass
+"""
+import argparse
+import dataclasses as dc
+import json
+import pathlib
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES, get_arch, list_archs
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import (
+    abstract_params,
+    input_specs,
+    make_prefill_step,
+    make_serve_step,
+    make_train_step,
+    resolve_arch_for_shape,
+    step_shardings,
+)
+from repro.optim import adam
+from repro.roofline import TPU_V5E, analyze_compiled, collective_bytes
+from repro.roofline.analytic import analytic_costs
+from repro.roofline.hlo import collective_link_bytes
+from repro.roofline.report import RooflineResult, model_flops_estimate
+
+
+def default_microbatches(cfg, shape, mesh) -> int:
+    """Grad-accumulation factor: keep per-device microbatch activations
+    around <=128MB per layer boundary (tokens/dev/microbatch * d_model * 2B),
+    while keeping batch/microbatch divisible by the data shards."""
+    if shape.mode != "train":
+        return 1
+    dp = 1
+    for a in ("pod", "data"):
+        if a in mesh.axis_names:
+            dp *= mesh.shape[a]
+    tokens_per_dev = shape.global_batch * shape.seq_len // dp
+    budget = 128 * 1024**2
+    m = 1
+    while (
+        tokens_per_dev // m * cfg.d_model * 2 > budget
+        and m * 2 <= shape.global_batch
+        and (shape.global_batch // (m * 2)) % dp == 0
+    ):
+        m *= 2
+    return m
+
+
+def _compile_step(cfg, shape, mesh, microbatches: int):
+    """jit + lower + compile the step selected by shape.mode for cfg."""
+    params = abstract_params(cfg)
+    shardings = step_shardings(cfg, shape, mesh)
+    specs = input_specs(cfg, shape)
+    with jax.set_mesh(mesh):
+        if shape.mode == "train":
+            _, train_step = make_train_step(cfg, mesh, microbatches=microbatches)
+            opt_state = jax.eval_shape(adam(1e-4).init, params)
+            fn = jax.jit(
+                train_step,
+                in_shardings=shardings,
+                out_shardings=(shardings[0], shardings[1], None),
+                donate_argnums=(0, 1),
+            )
+            lowered = fn.lower(params, opt_state, specs["batch"])
+        elif shape.mode == "prefill":
+            prefill_step = make_prefill_step(cfg, mesh)
+            fn = jax.jit(prefill_step, in_shardings=shardings)
+            lowered = fn.lower(params, specs["batch"])
+        else:
+            serve_step = make_serve_step(cfg, mesh)
+            fn = jax.jit(
+                serve_step,
+                in_shardings=shardings,
+                out_shardings=(None, shardings[1]),
+                donate_argnums=(1,),
+            )
+            lowered = fn.lower(params, specs["cache"], specs["tokens"], specs["pos"])
+        return lowered, lowered.compile()
+
+
+def _extract_costs(compiled) -> dict:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    by_kind = collective_bytes(compiled.as_text())
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "hbm_bytes": float(cost.get("bytes accessed", 0.0)),
+        "link_bytes": collective_link_bytes(by_kind),
+        "by_kind": by_kind,
+    }
+
+
+def probe_depths(cfg) -> tuple[int, int]:
+    if cfg.family == "hybrid" and cfg.shared_attn_every:
+        k = cfg.shared_attn_every
+        return (k, 2 * k)
+    return (2, 4)
+
+
+def probe_collectives(cfg, shape, mesh, microbatches: int, *, verbose=True) -> dict:
+    """Collective bytes from two shallow LAYER-UNROLLED compiles, linearly
+    extrapolated to full depth (exact: unrolled layers are identical
+    subgraphs, and no collective lives inside the attention/SSD chunk loops).
+
+    The probes compile with microbatches=1; per-microbatch weight
+    all-gathers (FSDP + the MoE shard_map interior) repeat per microbatch in
+    the real program, so the all-gather bytes are scaled by M.  Token-sized
+    collectives (psums/reduce-scatters over activations and gradients) are
+    batch-total and M-invariant."""
+    d1, d2 = probe_depths(cfg)
+    cs = []
+    for L in (d1, d2):
+        cfgL = dc.replace(cfg, num_layers=L, scan_unroll=True)
+        t0 = time.time()
+        _, compiled = _compile_step(cfgL, shape, mesh, microbatches=1)
+        cs.append(_extract_costs(compiled))
+        if verbose:
+            print(f"   probe L={L}: {time.time() - t0:.0f}s "
+                  f"link_bytes={cs[-1]['link_bytes']:.3e}")
+    kinds = set(cs[0]["by_kind"]) | set(cs[1]["by_kind"])
+    by_kind = {}
+    for k in kinds:
+        a, b = cs[0]["by_kind"].get(k, 0), cs[1]["by_kind"].get(k, 0)
+        v = a + (b - a) / (d2 - d1) * (cfg.num_layers - d1)
+        if k == "all-gather" and microbatches > 1:
+            v *= microbatches
+        by_kind[k] = int(v)
+    return {
+        "by_kind": by_kind,
+        "link_bytes": collective_link_bytes(by_kind),
+        "probe_depths": [d1, d2],
+    }
+
+
+def _mem_field(mem, name: str) -> int:
+    try:
+        return int(getattr(mem, name))
+    except (AttributeError, TypeError):
+        try:
+            return int(getattr(mem, name)())
+        except Exception:  # noqa: BLE001
+            return 0
+
+
+def run_pair(arch: str, shape_name: str, *, multi_pod=False, microbatches=None,
+             with_probe=True, verbose=True, overrides=None) -> RooflineResult:
+    """Full dry-run of one (arch x shape x mesh): scan compile (+memory) and,
+    optionally, the probe pass for roofline accounting.  ``overrides`` is a
+    dict of ArchConfig field replacements (§Perf levers)."""
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    chips = 512 if multi_pod else 256
+    shape = SHAPES[shape_name]
+    cfg, variant = resolve_arch_for_shape(get_arch(arch), shape)
+    if overrides:
+        cfg = dc.replace(cfg, **overrides)
+        variant = variant + "+" + ",".join(overrides)
+    mb = microbatches or default_microbatches(cfg, shape, mesh)
+
+    t0 = time.time()
+    lowered, compiled = _compile_step(cfg, shape, mesh, microbatches=mb)
+    t_scan = time.time() - t0
+    mem = compiled.memory_analysis()
+    if verbose:
+        print(f"== {arch} x {shape_name} ({mesh_name}, mb={mb}{variant}) [compile {t_scan:.0f}s]")
+        print(f"   memory_analysis: {mem}")
+        ca = compiled.cost_analysis()
+        print(f"   cost_analysis(scan): flops={ca.get('flops', 0):.3e} "
+              f"bytes={ca.get('bytes accessed', 0):.3e}")
+
+    # flops / HBM bytes: analytic op model (validated vs unrolled HLO —
+    # tests/test_roofline.py); collectives: HLO probe extrapolation.
+    costs = analytic_costs(cfg, shape, chips=chips)
+    if with_probe:
+        costs.update(probe_collectives(cfg, shape, mesh, mb, verbose=verbose))
+    else:
+        hlo = _extract_costs(compiled)
+        costs["by_kind"] = hlo["by_kind"]
+        costs["link_bytes"] = hlo["link_bytes"]
+
+    chip = TPU_V5E
+    t_c = costs["flops"] / chip.peak_flops_bf16
+    t_m = costs["hbm_bytes"] / chip.hbm_bw
+    t_x = costs["link_bytes"] / chip.ici_link_bw
+    bottleneck = max((("compute", t_c), ("memory", t_m), ("collective", t_x)),
+                     key=lambda kv: kv[1])[0]
+    mf = model_flops_estimate(cfg, shape)
+    res = RooflineResult(
+        arch=arch,
+        shape=shape_name,
+        mesh=mesh_name,
+        chips=chips,
+        flops_per_chip=costs["flops"],
+        hbm_bytes_per_chip=costs["hbm_bytes"],
+        coll_bytes_by_kind=costs["by_kind"],
+        link_bytes_per_chip=costs["link_bytes"],
+        arg_bytes=_mem_field(mem, "argument_size_in_bytes"),
+        output_bytes=_mem_field(mem, "output_size_in_bytes"),
+        temp_bytes=_mem_field(mem, "temp_size_in_bytes"),
+        peak_bytes=_mem_field(mem, "argument_size_in_bytes")
+        + _mem_field(mem, "temp_size_in_bytes")
+        + _mem_field(mem, "output_size_in_bytes")
+        - _mem_field(mem, "alias_size_in_bytes"),
+        t_compute=t_c,
+        t_memory=t_m,
+        t_collective=t_x,
+        bottleneck=bottleneck,
+        model_flops=mf,
+        useful_ratio=mf / (costs["flops"] * chips) if costs["flops"] else 0.0,
+        microbatches=mb,
+        variant=variant,
+    )
+    if verbose:
+        print("   " + res.summary())
+    return res
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="architecture id (default: all)")
+    ap.add_argument("--shape", default=None, help="input shape (default: all)")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--no-probe", action="store_true",
+                    help="skip the unrolled probe pass (pass/fail + memory only)")
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--json-dir", default="experiments/dryrun")
+    ap.add_argument("--bf16-gather", action="store_true", help="§Perf: bf16 weight all-gathers")
+    ap.add_argument("--no-fsdp", action="store_true", help="§Perf: replicate weights over data")
+    ap.add_argument("--bf16-params", action="store_true", help="§Perf: bf16 stored weights")
+    ap.add_argument("--bf16-cotangents", action="store_true", help="§Perf: bf16 bwd dx")
+    ap.add_argument("--remat-save", action="store_true", help="§Perf: save sublayer outputs (no remat re-psum)")
+    args = ap.parse_args()
+    overrides = {}
+    if args.bf16_gather:
+        overrides["bf16_weight_gather"] = True
+    if args.no_fsdp:
+        overrides["no_fsdp"] = True
+    if args.bf16_params:
+        overrides["bf16_params"] = True
+    if args.bf16_cotangents:
+        overrides["bf16_cotangents"] = True
+    if args.remat_save:
+        overrides["remat_save_outputs"] = True
+
+    archs = [args.arch] if args.arch else list_archs()
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    outdir = pathlib.Path(args.json_dir)
+    outdir.mkdir(parents=True, exist_ok=True)
+    mesh_tag = "2x16x16" if args.multi_pod else "16x16"
+
+    failures = []
+    for arch in archs:
+        for shape_name in shapes:
+            try:
+                res = run_pair(
+                    arch, shape_name,
+                    multi_pod=args.multi_pod,
+                    microbatches=args.microbatches,
+                    with_probe=not args.no_probe,
+                    overrides=overrides or None,
+                )
+            except Exception as e:  # noqa: BLE001 — report and continue the sweep
+                failures.append((arch, shape_name, repr(e)))
+                print(f"FAIL {arch} {shape_name}: {e}")
+                traceback.print_exc()
+                continue
+            (outdir / f"{arch}_{shape_name}_{mesh_tag}.json").write_text(res.to_json())
+
+    total = len(archs) * len(shapes)
+    print(f"\n{total - len(failures)}/{total} ok")
+    for a, s, e in failures:
+        print(f"  FAIL {a} {s}: {e}")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+"""Production mesh construction.
+
+Kept as FUNCTIONS (never module-level constants) so importing this module
+never touches jax device state — the dry-run must set XLA_FLAGS before the
+first jax device query, and smoke tests must keep seeing one CPU device.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """TPU v5e production mesh: one pod = (data=16, model=16) = 256 chips;
+    two pods add a leading pure-DP 'pod' axis = 512 chips."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model: int | None = None):
+    """Small debug mesh over whatever devices exist (CPU forced-host runs)."""
+    n = len(jax.devices())
+    model = model or (2 if n % 2 == 0 and n > 1 else 1)
+    return jax.make_mesh((n // model, model), ("data", "model"))

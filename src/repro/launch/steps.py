@@ -1,0 +1,187 @@
+"""Step factories + abstract input specs for every (arch × input-shape).
+
+``input_specs(cfg, shape)`` builds ShapeDtypeStruct stand-ins (weak-type
+correct, shardable, ZERO device allocation) for everything a step consumes —
+the same pattern the dry-run lowers against.  ``make_train_step`` /
+``make_prefill_step`` / ``make_serve_step`` return pure jittable functions.
+
+Shape semantics (configs.base.SHAPES):
+  train_4k     -> train_step(params, opt_state, batch)
+  prefill_32k  -> prefill_step(params, batch) -> (last logits, decode cache)
+  decode_32k / long_500k -> serve_step(params, cache, tokens, pos) — ONE new
+    token against a context_len cache.  long_500k picks the sliding-window
+    VARIANT for pure full-attention archs (cfg.with_long_context_window),
+    and is native for ssm/hybrid/SWA archs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs import ArchConfig, ShapeConfig
+from repro.distributed import batch_shardings, cache_shardings, make_constrainer, param_shardings
+from repro.models import init_decode_cache, init_lm_params, lm_decode_step, lm_loss
+from repro.models.lm import D_VISION, lm_prefill
+from repro.optim import adam, apply_updates
+
+LONG_CONTEXT_SEQ = 131072  # >= this, pure full attention is not allowed
+
+
+def resolve_arch_for_shape(cfg: ArchConfig, shape: ShapeConfig) -> tuple[ArchConfig, str]:
+    """Apply the long-context sliding-window variant when required.
+
+    Returns (possibly modified cfg, variant tag '' | '+swa')."""
+    if shape.seq_len >= LONG_CONTEXT_SEQ and not cfg.supports_seq_len(shape.seq_len):
+        return cfg.with_long_context_window(), "+swa"
+    return cfg, ""
+
+
+# ------------------------------------------------------------ input specs
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def train_batch_specs(cfg: ArchConfig, shape: ShapeConfig) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    specs = {
+        "labels": _sds((B, S), jnp.int32),
+        "mask": _sds((B, S), jnp.float32),
+    }
+    if cfg.modality == "vision":
+        specs["tokens"] = _sds((B, S - cfg.frontend_tokens), jnp.int32)
+        specs["patch_embeds"] = _sds((B, cfg.frontend_tokens, D_VISION), jnp.bfloat16)
+    else:
+        specs["tokens"] = _sds((B, S), jnp.int32)
+    return specs
+
+
+def prefill_batch_specs(cfg: ArchConfig, shape: ShapeConfig) -> dict:
+    specs = train_batch_specs(cfg, shape)
+    specs.pop("labels")
+    specs.pop("mask")
+    return specs
+
+
+def decode_cache_specs(cfg: ArchConfig, shape: ShapeConfig) -> Any:
+    return jax.eval_shape(
+        lambda: init_decode_cache(cfg, shape.global_batch, context_len=shape.seq_len)
+    )
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig) -> dict:
+    """All abstract inputs for the step this shape lowers (excluding params
+    and optimizer state, which come from ``abstract_params``)."""
+    cfg, _ = resolve_arch_for_shape(cfg, shape)
+    if shape.mode == "train":
+        return {"batch": train_batch_specs(cfg, shape)}
+    if shape.mode == "prefill":
+        return {"batch": prefill_batch_specs(cfg, shape)}
+    return {
+        "cache": decode_cache_specs(cfg, shape),
+        "tokens": _sds((shape.global_batch, 1), jnp.int32),
+        "pos": _sds((), jnp.int32),
+    }
+
+
+def abstract_params(cfg: ArchConfig, dtype=None):
+    if dtype is None:
+        dtype = jnp.bfloat16 if cfg.bf16_params else jnp.float32
+    return jax.eval_shape(partial(init_lm_params, cfg=cfg, dtype=dtype), jax.random.PRNGKey(0))
+
+
+# -------------------------------------------------------------- factories
+
+
+def make_train_step(
+    cfg: ArchConfig,
+    mesh=None,
+    *,
+    microbatches: int = 1,
+    learning_rate: float = 3e-4,
+    weight_decay: float = 0.0,
+):
+    """Returns (optimizer, train_step(params, opt_state, batch))."""
+    constrain = make_constrainer(mesh)
+    opt = adam(learning_rate, weight_decay=weight_decay)
+
+    def loss_fn(params, mb):
+        return lm_loss(params, mb, cfg, mesh=mesh, constrain=constrain)
+
+    def train_step(params, opt_state, batch):
+        if microbatches > 1:
+            # (B, ...) -> (M, B/M, ...) keeping the SECOND dim as the sharded
+            # batch dim (reshape groups M minor so device-local rows stay
+            # device-local; the swap is sharding-metadata only).
+            def split(a):
+                B = a.shape[0]
+                return a.reshape(B // microbatches, microbatches, *a.shape[1:]).swapaxes(0, 1)
+
+            mbs = jax.tree.map(split, batch)
+
+            def body(acc, mb):
+                gsum, lsum = acc
+                (l, _), g = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
+                return (jax.tree.map(jnp.add, gsum, g), lsum + l), None
+
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum, lsum), _ = lax.scan(body, (zeros, jnp.float32(0.0)), mbs)
+            grads = jax.tree.map(lambda g: g / microbatches, gsum)
+            loss = lsum / microbatches
+        else:
+            (loss, _), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+        updates, opt_state = opt.update(grads, opt_state, params)
+        params = apply_updates(params, updates)
+        return params, opt_state, {"loss": loss}
+
+    return opt, train_step
+
+
+def make_prefill_step(cfg: ArchConfig, mesh=None):
+    constrain = make_constrainer(mesh)
+
+    def prefill_step(params, batch):
+        return lm_prefill(params, batch, cfg, mesh=mesh, constrain=constrain)
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ArchConfig, mesh=None):
+    constrain = make_constrainer(mesh)
+
+    def serve_step(params, cache, tokens, pos):
+        return lm_decode_step(params, cache, tokens, pos, cfg, mesh=mesh, constrain=constrain)
+
+    return serve_step
+
+
+# --------------------------------------------------------- spec shardings
+
+
+def step_shardings(cfg: ArchConfig, shape: ShapeConfig, mesh):
+    """(in_shardings, args) for jit+lower of the step this shape selects."""
+    cfg, _ = resolve_arch_for_shape(cfg, shape)
+    params = abstract_params(cfg)
+    p_sh = param_shardings(params, cfg, mesh)
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    repl = NamedSharding(mesh, P())
+    if shape.mode == "train":
+        batch = train_batch_specs(cfg, shape)
+        b_sh = batch_shardings(batch, mesh)
+        opt_state = jax.eval_shape(adam(1e-4).init, params)
+        o_sh = type(opt_state)(repl, p_sh, p_sh)
+        return (p_sh, o_sh, b_sh)
+    if shape.mode == "prefill":
+        batch = prefill_batch_specs(cfg, shape)
+        return (p_sh, batch_shardings(batch, mesh))
+    cache = decode_cache_specs(cfg, shape)
+    c_sh = cache_shardings(cache, cfg, mesh)
+    tok_sh = batch_shardings(_sds((shape.global_batch, 1), jnp.int32), mesh)
+    return (p_sh, c_sh, tok_sh, repl)

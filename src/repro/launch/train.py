@@ -1,0 +1,89 @@
+"""LM training driver.
+
+Runs any assigned architecture (``--arch``) at any scale:
+  * real training on the available devices (CPU smoke / TPU slice) with a
+    host mesh, synthetic-token data pipeline, checkpointing;
+  * ``--production-mesh`` switches to the 16x16 / 2x16x16 meshes (requires a
+    matching real topology or the forced-host dry-run environment).
+
+Example (CPU, reduced config):
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-0.6b --reduced \
+      --steps 20 --batch 8 --seq 128
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import save
+from repro.configs import get_arch, get_reduced
+from repro.data.loader import token_batches
+from repro.distributed import batch_shardings, param_shardings
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.launch.steps import make_train_step
+from repro.models import init_lm_params
+from repro.optim import adam
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true", help="use the smoke-test-scale variant")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--mesh", choices=["none", "host", "production", "production-multipod"], default="none")
+    ap.add_argument("--checkpoint", default=None, help="path to save the final checkpoint")
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    cfg = get_reduced(args.arch) if args.reduced else get_arch(args.arch)
+    mesh = None
+    if args.mesh == "host":
+        mesh = make_host_mesh()
+    elif args.mesh.startswith("production"):
+        mesh = make_production_mesh(multi_pod=args.mesh.endswith("multipod"))
+
+    key = jax.random.PRNGKey(args.seed)
+    params = init_lm_params(key, cfg)
+    opt, train_step = make_train_step(
+        cfg, mesh, microbatches=args.microbatches, learning_rate=args.lr
+    )
+    opt_state = opt.init(params)
+
+    if mesh is not None:
+        p_sh = param_shardings(jax.eval_shape(lambda: params), cfg, mesh)
+        params = jax.device_put(params, p_sh)
+        step_fn = jax.jit(train_step, donate_argnums=(0, 1))
+    else:
+        step_fn = jax.jit(train_step, donate_argnums=(0, 1))
+
+    losses = []
+    t0 = time.time()
+    for step, batch in enumerate(token_batches(cfg, args.batch, args.seq, seed=args.seed)):
+        if step >= args.steps:
+            break
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        loss = float(metrics["loss"])
+        losses.append(loss)
+        if step % args.log_every == 0 or step == args.steps - 1:
+            dt = time.time() - t0
+            tok_s = (step + 1) * args.batch * args.seq / dt
+            print(f"step {step:5d} loss {loss:8.4f}  ({tok_s:,.0f} tok/s)")
+
+    print(f"final loss {losses[-1]:.4f} (start {losses[0]:.4f})")
+    if args.checkpoint:
+        save(args.checkpoint, {"params": params, "step": args.steps})
+        print(f"checkpoint -> {args.checkpoint}")
+    return losses
+
+
+if __name__ == "__main__":
+    main()

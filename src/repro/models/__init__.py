@@ -1,0 +1,7 @@
+from repro.models.lm import (
+    init_decode_cache,
+    init_lm_params,
+    lm_decode_step,
+    lm_forward,
+    lm_loss,
+)

@@ -1,0 +1,114 @@
+"""Distributed decode attention (flash-decoding on TPU).
+
+Problem: a decode step writes ONE token into a KV cache that must be sharded
+over its sequence dim for the big archs (qwen2-72b's 32k cache is 86GB/device
+if seq-replicated over the model axis).  Under plain GSPMD, a
+``dynamic_update_slice`` at a traced position into a seq-sharded tensor
+triggers "involuntary full rematerialization" — the compiler replicates the
+whole cache (seen as multi-GB all-gathers in the dry-run).
+
+Fix — the flash-decoding schedule, expressed with shard_map:
+  * each ``model``-axis shard owns a contiguous S/|model| slice of the cache;
+  * the new token's k/v is written ONLY by the owner shard (O(1)
+    dynamic-update-slice on the local slice; non-owners write back the value
+    they already hold at the clamped slot — no-op, no copy);
+  * each shard computes attention over its local slice with a local
+    (max, sumexp, weighted-V) triple, then the shards combine with one
+    log-sum-exp reduction: pmax for the max, psum for the rescaled
+    normalizer and values — (B, H)-sized collectives instead of cache-sized.
+
+This is also the paper's separability argument in miniature: the softmax
+statistics are ADDITIVE across shards after max-alignment, so the reduce is
+a key-value-free psum, never a gather of the cache.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax, shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.models.layers import NEG_INF
+
+DATA_AXES = ("pod", "data")
+
+
+def _local_lse_attend(q, k, v, valid):
+    """Local partial attention. q:(B,1,H,hd), k/v:(B,Sl,Hk,hd), valid:(B,Sl).
+    Returns (m, l, o) f32: running max (B,Hk,g), normalizer, weighted values
+    (B,Hk,g,hd)."""
+    B, _, H, hd = q.shape
+    Sl, Hk = k.shape[1], k.shape[2]
+    g = H // Hk
+    qf = q.astype(jnp.float32).reshape(B, Hk, g, hd)
+    s = jnp.einsum("bhgd,bshd->bhgs", qf, k.astype(jnp.float32)) / math.sqrt(hd)
+    s = jnp.where(valid[:, None, None], s, NEG_INF)
+    m = jnp.max(s, axis=-1)  # (B,Hk,g)
+    p = jnp.exp(s - m[..., None])
+    p = jnp.where(valid[:, None, None], p, 0.0)
+    l = jnp.sum(p, axis=-1)
+    o = jnp.einsum("bhgs,bshd->bhgd", p, v.astype(jnp.float32))
+    return m, l, o
+
+
+def sharded_decode_attention(q, cache_k, cache_v, k_new, v_new, pos, mesh, *, seq_axis="model"):
+    """Write (k_new, v_new) at ``pos`` into the seq-sharded cache and attend.
+
+    q: (B,1,H,hd); cache_k/v: (B,Sc,Hk,hd) sharded P(dp, seq_axis, None, None);
+    k_new/v_new: (B,1,Hk,hd); pos: scalar int32 (slot index, ring-resolved by
+    the caller).  Returns (out (B,1,H,hd), new cache_k, new cache_v).
+    """
+    B, _, H, hd = q.shape
+    Sc = cache_k.shape[1]
+    dp = tuple(a for a in DATA_AXES if a in mesh.axis_names)
+    bspec = dp if B % max(
+        1, math.prod(mesh.shape[a] for a in dp)
+    ) == 0 and B > 1 else None
+    cspec = P(bspec, seq_axis if Sc % mesh.shape[seq_axis] == 0 else None, None, None)
+    qspec = P(bspec, None, None, None)
+
+    n_shards = mesh.shape[seq_axis] if cspec[1] is not None else 1
+
+    def body(q, ck, cv, kn, vn, pos):
+        Sl = ck.shape[1]
+        if n_shards > 1:
+            ax = lax.axis_index(seq_axis)
+        else:
+            ax = jnp.int32(0)
+        wslot = pos % (Sl * n_shards)  # ring-buffer write slot
+        owner = wslot // Sl
+        owned = owner == ax
+        local_slot = jnp.clip(wslot - ax * Sl, 0, Sl - 1).astype(jnp.int32)
+        z = jnp.int32(0)
+        # non-owners re-write the slot's current contents: O(1), no resharding
+        cur_k = lax.dynamic_slice(ck, (z, local_slot, z, z), kn.shape)
+        cur_v = lax.dynamic_slice(cv, (z, local_slot, z, z), vn.shape)
+        kw = jnp.where(owned, kn.astype(ck.dtype), cur_k)
+        vw = jnp.where(owned, vn.astype(cv.dtype), cur_v)
+        ck = lax.dynamic_update_slice(ck, kw, (z, local_slot, z, z))
+        cv = lax.dynamic_update_slice(cv, vw, (z, local_slot, z, z))
+
+        spos = ax * Sl + jnp.arange(Sl)  # global positions of local slots
+        valid = jnp.broadcast_to((spos <= pos)[None], (ck.shape[0], Sl))
+        m, l, o = _local_lse_attend(q, ck, cv, valid)
+        if n_shards > 1:
+            m_g = lax.pmax(m, seq_axis)
+            corr = jnp.exp(m - m_g)
+            l_g = lax.psum(l * corr, seq_axis)
+            o_g = lax.psum(o * corr[..., None], seq_axis)
+        else:
+            l_g, o_g = l, o
+        out = o_g / jnp.maximum(l_g, 1e-30)[..., None]
+        Bl = q.shape[0]
+        out = out.reshape(Bl, 1, H, hd).astype(q.dtype)
+        return out, ck, cv
+
+    return shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(qspec, cspec, cspec, qspec, qspec, P()),
+        out_specs=(qspec, cspec, cspec),
+        check_vma=False,
+    )(q, cache_k, cache_v, k_new, v_new, pos)

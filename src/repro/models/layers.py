@@ -1,0 +1,225 @@
+"""Shared neural layers for the model zoo.
+
+Everything is a pure function over explicit parameter pytrees (dict of
+arrays).  No framework (flax/haiku) is used: the params are plain pytrees so
+that pjit in_shardings / NamedSharding rules (distributed/sharding.py) can be
+zipped against them path-by-path.
+
+Design notes
+------------
+* Attention is implemented as a CHUNKED online-softmax scan (flash-attention
+  schedule in pure jnp).  This is what makes ``prefill_32k`` lowerable: naive
+  (S, S) score materialisation at 32k/500k would not fit any memory budget.
+  The Pallas kernel in ``repro.kernels.flash_attention`` implements the same
+  schedule with explicit VMEM BlockSpecs for TPU; this jnp version is both
+  the CPU-lowerable default and the kernel's oracle.
+* Sliding-window attention bounds the KV range per query chunk with a
+  dynamic slice, so SWA prefill is O(S * W) not O(S^2).
+* All matmuls run in the config's activation dtype (bf16 by default) with
+  f32 softmax/normalizer accumulation.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+# ----------------------------------------------------------------- norms
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    out = x * lax.rsqrt(var + eps)
+    return (out * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def init_rms_norm(d: int, dtype=jnp.float32) -> jax.Array:
+    # stored as (scale - 1) so zero-init == identity
+    return jnp.zeros((d,), dtype)
+
+
+# ----------------------------------------------------------------- RoPE
+
+
+def rope_angles(positions: jax.Array, head_dim: int, theta: float) -> tuple[jax.Array, jax.Array]:
+    """cos/sin tables for the given absolute positions. positions: (...,S)."""
+    half = head_dim // 2
+    freqs = jnp.exp(-math.log(theta) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (...,S,half)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: (B,S,H,hd); cos/sin: (S,half) or (B,S,half)."""
+    dt = x.dtype
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    if cos.ndim == 2:  # (S,half) -> (1,S,1,half)
+        cos, sin = cos[None, :, None, :], sin[None, :, None, :]
+    elif cos.ndim == 3:  # (B,S,half) -> (B,S,1,half)
+        cos, sin = cos[:, :, None, :], sin[:, :, None, :]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(dt)
+
+
+# ----------------------------------------------------------------- MLP
+
+
+def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array, w_down: jax.Array) -> jax.Array:
+    dt = x.dtype
+    g = jnp.einsum("...d,df->...f", x, w_gate.astype(dt))
+    u = jnp.einsum("...d,df->...f", x, w_up.astype(dt))
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(dt) * u
+    return jnp.einsum("...f,fd->...d", h, w_down.astype(dt))
+
+
+# ------------------------------------------------------- chunked attention
+
+NEG_INF = -1e30
+
+
+def _chunk_attend(q, k, v, qpos0, kpos0, *, causal: bool, window: int):
+    """One (q-chunk x kv-chunk) tile. q:(B,Q,H,hd) k/v:(B,Kc,Hk,hd).
+
+    Returns (scores_max, exp_scores @ v, sumexp) in f32 — the online-softmax
+    partial terms.  GQA: H % Hk == 0, q heads grouped over kv heads.
+    """
+    B, Q, H, hd = q.shape
+    Hk = k.shape[2]
+    group = H // Hk
+    qf = q.astype(jnp.float32).reshape(B, Q, Hk, group, hd)
+    kf = k.astype(jnp.float32)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qf, kf) / math.sqrt(hd)
+    qpos = qpos0 + jnp.arange(Q)
+    kpos = kpos0 + jnp.arange(k.shape[1])
+    mask = jnp.ones((Q, k.shape[1]), bool)
+    if causal:
+        mask &= qpos[:, None] >= kpos[None, :]
+    if window > 0:
+        mask &= qpos[:, None] - kpos[None, :] < window
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    m = jnp.max(s, axis=-1)  # (B,Hk,g,Q)
+    p = jnp.exp(s - m[..., None])
+    l = jnp.sum(p, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bhgqd", p, v.astype(jnp.float32))
+    return m, o, l
+
+
+def chunked_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    q_chunk: int = 512,
+    kv_chunk: int = 512,
+    unroll: bool = False,
+) -> jax.Array:
+    """Flash-style attention in pure jnp.  q/k/v: (B,S,H|Hk,hd) -> (B,S,H,hd).
+
+    Scans over query chunks (outer) and kv chunks (inner) with online
+    softmax accumulation.  For sliding windows, each query chunk only scans
+    the kv chunks that can fall inside the window (dynamic slice), so cost is
+    O(S*W).  For causal full attention the inner scan covers prefix chunks
+    only via masking + early bound on the scan length.
+    """
+    B, S, H, hd = q.shape
+    Hk = k.shape[2]
+    q_chunk = min(q_chunk, S)
+    kv_chunk = min(kv_chunk, S)
+    assert S % q_chunk == 0 and S % kv_chunk == 0, (S, q_chunk, kv_chunk)
+    nq = S // q_chunk
+
+    if window > 0:
+        # kv range needed by q chunk starting at t0: [t0 - window + 1, t0 + q_chunk)
+        span = q_chunk + ((window + kv_chunk - 1) // kv_chunk) * kv_chunk
+        span = min(span, S)
+
+        def per_qchunk(iq):
+            t0 = iq * q_chunk
+            qc = lax.dynamic_slice_in_dim(q, t0, q_chunk, axis=1)
+            start = jnp.maximum(t0 + q_chunk - span, 0)
+            kc = lax.dynamic_slice_in_dim(k, start, span, axis=1)
+            vc = lax.dynamic_slice_in_dim(v, start, span, axis=1)
+            m, o, l = _chunk_attend(qc, kc, vc, t0, start, causal=causal, window=window)
+            out = o / jnp.maximum(l, 1e-30)[..., None]
+            return out.reshape(B, Hk * (H // Hk), q_chunk, hd).transpose(0, 2, 1, 3)
+
+        if unroll:  # analysis mode: every tile visible to HloCostAnalysis
+            outs = jnp.stack([per_qchunk(jnp.int32(i)) for i in range(nq)])
+        else:
+            outs = lax.map(per_qchunk, jnp.arange(nq))  # (nq,B,qc,H,hd)
+        return outs.transpose(1, 0, 2, 3, 4).reshape(B, S, H, hd).astype(q.dtype)
+
+    nk = S // kv_chunk
+    kr = k.reshape(B, nk, kv_chunk, Hk, hd)
+    vr = v.reshape(B, nk, kv_chunk, Hk, hd)
+
+    def per_qchunk(iq, static_iq=None):
+        t0 = iq * q_chunk
+        qc = lax.dynamic_slice_in_dim(q, t0, q_chunk, axis=1)
+
+        def attend_tile(carry, kc, vc, k0):
+            m_run, l_run, o_run = carry
+            m, o, l = _chunk_attend(qc, kc, vc, t0, k0, causal=causal, window=0)
+            m_new = jnp.maximum(m_run, m)
+            c1 = jnp.exp(m_run - m_new)
+            c2 = jnp.exp(m - m_new)
+            return (m_new, l_run * c1 + l * c2, o_run * c1[..., None] + o * c2[..., None])
+
+        def body(carry, ik):
+            valid = jnp.logical_or(jnp.logical_not(causal), ik * kv_chunk <= t0 + q_chunk - 1)
+            new = lax.cond(
+                valid,
+                lambda c: attend_tile(c, kr[:, ik], vr[:, ik], ik * kv_chunk),
+                lambda c: c,
+                carry,
+            )
+            return new, None
+
+        g = H // Hk
+        m0 = jnp.full((B, Hk, g, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, Hk, g, q_chunk), jnp.float32)
+        o0 = jnp.zeros((B, Hk, g, q_chunk, hd), jnp.float32)
+        carry = (m0, l0, o0)
+        if static_iq is not None:  # analysis mode: static causal tile skip
+            hi = static_iq + 1 if causal else nk
+            for ik in range(hi):
+                carry = attend_tile(carry, kr[:, ik], vr[:, ik], ik * kv_chunk)
+            m_f, l_f, o_f = carry
+        else:
+            (m_f, l_f, o_f), _ = lax.scan(body, carry, jnp.arange(nk))
+        out = o_f / jnp.maximum(l_f, 1e-30)[..., None]
+        return out.reshape(B, H, q_chunk, hd).transpose(0, 2, 1, 3)
+
+    if unroll:
+        outs = jnp.stack([per_qchunk(jnp.int32(i), static_iq=i) for i in range(nq)])
+    else:
+        outs = lax.map(per_qchunk, jnp.arange(nq))
+    return outs.transpose(1, 0, 2, 3, 4).reshape(B, S, H, hd).astype(q.dtype)
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array, valid: jax.Array) -> jax.Array:
+    """Single-token attention against a cache.
+
+    q: (B,1,H,hd); caches: (B,Scache,Hk,hd); valid: (B,Scache) bool mask of
+    live cache slots (supports both linear and ring-buffer caches).
+    Naive einsum is fine here — scores are (B,H,1,S), tiny per device, and
+    the cache seq dim may be sharded (GSPMD turns the softmax reductions into
+    cheap (B,H) collectives).
+    """
+    B, _, H, hd = q.shape
+    S, Hk = k_cache.shape[1], k_cache.shape[2]
+    g = H // Hk
+    qf = q.astype(jnp.float32).reshape(B, Hk, g, hd)
+    s = jnp.einsum("bhgd,bshd->bhgs", qf, k_cache.astype(jnp.float32)) / math.sqrt(hd)
+    s = jnp.where(valid[:, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgs,bshd->bhgd", p, v_cache.astype(jnp.float32))
+    return o.reshape(B, 1, H, hd).astype(q.dtype)

@@ -1,0 +1,648 @@
+"""Decoder LM zoo: dense / MoE / SSM / hybrid / audio / VLM families.
+
+One parameter pytree + three pure entry points per architecture:
+
+  * ``init_lm_params(key, cfg)``      — parameter pytree (f32 master copies;
+    forward casts to ``cfg.activation_dtype`` at use).
+  * ``lm_forward(params, batch, cfg)``— full-sequence logits (train/prefill).
+  * ``lm_decode_step(params, cache, tokens, pos, cfg)`` — one-token decode
+    against a KV/SSM cache (``serve_step``).
+
+Layers are stacked on a leading L axis and applied with ``lax.scan`` (keeps
+the HLO O(1) in depth) with ``jax.checkpoint`` on the body (remat).
+
+Families:
+  dense  — pre-norm GQA attention + SwiGLU (granite/deepseek/qwen3/qwen2).
+  moe    — attention + MoE FFN (mixtral, qwen2-moe w/ shared experts).
+  ssm    — Mamba2/SSD mixer only (mamba2-1.3b).
+  hybrid — Mamba2 backbone + ONE SHARED attention+MLP block applied every
+           k-th layer (zamba2).
+  audio  — dense decoder over EnCodec tokens (musicgen); the conv codec
+           frontend is a stub per the assignment carve-out.
+  vlm    — dense decoder consuming projected patch embeddings + text tokens
+           (llava-next); the ViT tower is a stub, the projector is real.
+
+Sharding: the model takes a ``constrain(x, kind)`` callback (see
+``repro.distributed.sharding``).  With ``mesh=None`` (CPU smoke tests)
+everything runs unconstrained on one device.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.ad_checkpoint import checkpoint_name as _ckpt_name
+
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (
+    apply_rope,
+    chunked_attention,
+    decode_attention,
+    init_rms_norm,
+    rms_norm,
+    rope_angles,
+    swiglu,
+)
+from repro.models.moe import init_moe_params, moe_block
+
+D_VISION = 1024  # CLIP ViT-L/14 patch embedding width (llava-next stub)
+
+
+from functools import partial as _partial
+
+
+@_partial(jax.custom_vjp, nondiff_argnums=(1,))
+def _grad_cast_boundary(x, dtype_name: str):
+    return x
+
+
+def _gcb_fwd(x, dtype_name):
+    return x, None
+
+
+def _gcb_bwd(dtype_name, _res, g):
+    # identity forward; backward casts the cotangent to the primal dtype —
+    # stops the f32 CE cotangent from riding through every layer's dx psum
+    return (g.astype(jnp.dtype(dtype_name)),)
+
+
+_grad_cast_boundary.defvjp(_gcb_fwd, _gcb_bwd)
+
+Constrain = Callable[[jax.Array, str], jax.Array]
+_IDENT: Constrain = lambda x, kind: x
+
+
+def _wc(w, kind, cfg, constrain, dt):
+    """Weight at its use site, cast to the activation dtype.  With the
+    bf16_weight_gather lever the cast is pinned (optimization_barrier) and
+    the gathered (FSDP-unsharded) form is constrained on the bf16 COPY, so
+    the all-gather moves bf16 — XLA otherwise commutes the convert past the
+    collective and gathers the f32 master (observed in the probe HLO;
+    EXPERIMENTS.md §Perf)."""
+    w = w.astype(dt)
+    if cfg.bf16_weight_gather:
+        w = lax.optimization_barrier(w)
+        w = constrain(w, kind)
+    return w
+
+
+def _pin_reduce(delta, cfg):
+    """bf16_reduce lever: pin the layer-output partial sum in bf16 so the TP
+    all-reduce is not promoted to f32 (XLA moves the consumer's f32 upcast
+    before the all-reduce otherwise — 2x the dominant collective)."""
+    if cfg.bf16_weight_gather:
+        return lax.optimization_barrier(delta)
+    return delta
+
+
+# ================================================================== init
+
+
+def _init_attention(key, cfg, dtype) -> dict:
+    d, H, Hk, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    s = 1.0 / jnp.sqrt(d)
+    p = {
+        "wq": (jax.random.normal(ks[0], (d, H * hd)) * s).astype(dtype),
+        "wk": (jax.random.normal(ks[1], (d, Hk * hd)) * s).astype(dtype),
+        "wv": (jax.random.normal(ks[2], (d, Hk * hd)) * s).astype(dtype),
+        "wo": (jax.random.normal(ks[3], (H * hd, d)) * (1.0 / jnp.sqrt(H * hd))).astype(dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H * hd,), dtype)
+        p["bk"] = jnp.zeros((Hk * hd,), dtype)
+        p["bv"] = jnp.zeros((Hk * hd,), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = init_rms_norm(hd, dtype)
+        p["k_norm"] = init_rms_norm(hd, dtype)
+    return p
+
+
+def _init_mlp(key, cfg, dtype, d_ff=None) -> dict:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in, s_out = 1.0 / jnp.sqrt(d), 1.0 / jnp.sqrt(f)
+    return {
+        "w_gate": (jax.random.normal(k1, (d, f)) * s_in).astype(dtype),
+        "w_up": (jax.random.normal(k2, (d, f)) * s_in).astype(dtype),
+        "w_down": (jax.random.normal(k3, (f, d)) * s_out).astype(dtype),
+    }
+
+
+def _init_layer(key, cfg, dtype) -> dict:
+    d = cfg.d_model
+    fam = cfg.family
+    if fam in ("ssm", "hybrid"):
+        k1, _ = jax.random.split(key)
+        return {"ln": init_rms_norm(d, dtype), "mamba": ssm_mod.init_mamba2_params(k1, cfg, dtype)}
+    k1, k2 = jax.random.split(key)
+    layer = {
+        "ln1": init_rms_norm(d, dtype),
+        "ln2": init_rms_norm(d, dtype),
+        "attn": _init_attention(k1, cfg, dtype),
+    }
+    if fam == "moe":
+        layer["moe"] = init_moe_params(k2, cfg, dtype)
+    else:
+        layer["mlp"] = _init_mlp(k2, cfg, dtype)
+    return layer
+
+
+def init_lm_params(key, cfg, dtype=jnp.float32) -> dict:
+    keys = jax.random.split(key, cfg.num_layers + 3)
+    layers = [_init_layer(keys[i], cfg, dtype) for i in range(cfg.num_layers)]
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *layers)
+    params = {
+        "embed": (jax.random.normal(keys[-1], (cfg.vocab_size, cfg.d_model)) * 0.02).astype(dtype),
+        "layers": stacked,
+        "final_norm": init_rms_norm(cfg.d_model, dtype),
+    }
+    if cfg.family == "hybrid":
+        k1, k2 = jax.random.split(keys[-2])
+        params["shared_block"] = {
+            "ln1": init_rms_norm(cfg.d_model, dtype),
+            "ln2": init_rms_norm(cfg.d_model, dtype),
+            "attn": _init_attention(k1, cfg, dtype),
+            "mlp": _init_mlp(k2, cfg, dtype),
+        }
+    if cfg.modality == "vision":
+        params["vision_proj"] = (
+            jax.random.normal(keys[-3], (D_VISION, cfg.d_model)) * (1.0 / jnp.sqrt(D_VISION))
+        ).astype(dtype)
+    return params
+
+
+# ============================================================== attention
+
+
+def _project_qkv(p, x, cfg, constrain):
+    B, S, _ = x.shape
+    H, Hk, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    dt = x.dtype
+    q = jnp.einsum("bsd,de->bse", x, _wc(p["wq"], "w_col", cfg, constrain, dt))
+    k = jnp.einsum("bsd,de->bse", x, _wc(p["wk"], "w_col", cfg, constrain, dt))
+    v = jnp.einsum("bsd,de->bse", x, _wc(p["wv"], "w_col", cfg, constrain, dt))
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"].astype(dt), k + p["bk"].astype(dt), v + p["bv"].astype(dt)
+    q = constrain(q, "q_proj").reshape(B, S, H, hd)
+    k = constrain(k, "kv_proj").reshape(B, S, Hk, hd)
+    v = constrain(v, "kv_proj").reshape(B, S, Hk, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    return q, k, v
+
+
+def attention_forward(p, x, cfg, positions, constrain=_IDENT, *, window=None, return_kv=False):
+    """Full-sequence attention. x: (B,S,D); positions: (S,) absolute.
+
+    With ``return_kv`` also returns the post-RoPE (k, v) — the prefill path
+    trims/rolls them into the decode cache layout."""
+    B, S, _ = x.shape
+    q, k, v = _project_qkv(p, x, cfg, constrain)
+    cos, sin = rope_angles(positions, cfg.resolved_head_dim, cfg.rope_theta)
+    q, k = apply_rope(q, cos, sin), apply_rope(k, cos, sin)
+    w = cfg.sliding_window if window is None else window
+    qc = min(512, S)
+    out = chunked_attention(
+        q, k, v, causal=True, window=w, q_chunk=qc, kv_chunk=qc, unroll=cfg.inner_unroll
+    )
+    out = out.reshape(B, S, -1)
+    y = jnp.einsum("bse,ed->bsd", out, _wc(p["wo"], "w_row", cfg, constrain, x.dtype))
+    if return_kv:
+        return y, (k, v)
+    return y
+
+
+def _kv_to_cache(k, v, window: int):
+    """Trim full-sequence (B,S,Hk,hd) k/v to the decode cache layout.
+
+    With a sliding window the cache is a ring buffer of the last W
+    positions, where position p lives at slot p % W — jnp.roll by S
+    reproduces exactly the state token-by-token decoding would have built."""
+    S = k.shape[1]
+    if window and window < S:
+        k = jnp.roll(k[:, S - window :], shift=S % window, axis=1)
+        v = jnp.roll(v[:, S - window :], shift=S % window, axis=1)
+    return {"k": k, "v": v}
+
+
+def attention_decode(p, x, cache, pos, cfg, constrain=_IDENT, mesh=None):
+    """One-token attention. x: (B,1,D); cache: {k,v:(B,Sc,Hk,hd)};
+    pos: scalar int (number of tokens already in the cache).
+
+    If the cache length is smaller than the logical context (sliding-window
+    ring buffer), the write goes to slot ``pos % Sc`` and all filled slots
+    are valid (the ring holds exactly the last Sc positions).
+
+    With a mesh, the cache is seq-sharded over the ``model`` axis and this
+    dispatches to the flash-decoding shard_map path (owner-shard O(1) write +
+    log-sum-exp combine) — see ``repro.models.decode_attn``."""
+    B = x.shape[0]
+    Sc = cache["k"].shape[1]
+    q, k, v = _project_qkv(p, x, cfg, constrain)
+    cos, sin = rope_angles(pos[None], cfg.resolved_head_dim, cfg.rope_theta)
+    q, k = apply_rope(q, cos, sin), apply_rope(k, cos, sin)
+    if mesh is not None:
+        from repro.models.decode_attn import sharded_decode_attention
+
+        out, k_cache, v_cache = sharded_decode_attention(
+            q, cache["k"], cache["v"], k, v, pos.astype(jnp.int32), mesh
+        )
+    else:
+        slot = (pos % Sc).astype(jnp.int32)
+        z = jnp.int32(0)
+        k_cache = lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (z, slot, z, z))
+        v_cache = lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (z, slot, z, z))
+        valid = jnp.arange(Sc)[None, :] <= pos  # (1,Sc) -> broadcast over batch
+        valid = jnp.broadcast_to(valid, (B, Sc))
+        out = decode_attention(q, k_cache, v_cache, valid)
+    out = out.reshape(B, 1, -1)
+    y = jnp.einsum("bse,ed->bsd", out, _wc(p["wo"], "w_row", cfg, constrain, x.dtype))
+    return y, {"k": k_cache, "v": v_cache}
+
+
+def _shared_block_forward(p, x, cfg, positions, constrain):
+    """Zamba2 shared transformer block (train path): attn + MLP residuals."""
+    h = x + attention_forward(p["attn"], rms_norm(x, p["ln1"], cfg.norm_eps), cfg, positions, constrain)
+    hin = rms_norm(h, p["ln2"], cfg.norm_eps)
+    h = h + constrain(
+        swiglu(
+            hin,
+            _wc(p["mlp"]["w_gate"], "w_col", cfg, constrain, hin.dtype),
+            _wc(p["mlp"]["w_up"], "w_col", cfg, constrain, hin.dtype),
+            _wc(p["mlp"]["w_down"], "w_row", cfg, constrain, hin.dtype),
+        ),
+        "act",
+    )
+    return h
+
+
+# ===================================================== layer-stack driver
+
+
+def _layer_scan(body, carry, xs, L: int, unroll: bool, remat: bool = False, cfg=None):
+    """Apply ``body(carry, (xs_i, i))`` over L stacked layers.
+
+    Production mode is ``lax.scan`` (HLO O(1) in depth), optionally with
+    ``jax.checkpoint`` on the body (train remat).  Analysis mode
+    (cfg.scan_unroll) is a Python loop where ``i`` stays a PYTHON int — the
+    hybrid shared-block cadence is static (no lax.cond), so HloCostAnalysis
+    counts exactly the executed work (it otherwise charges untaken
+    conditional branches).  The remat wrapper closes over ``i`` so the
+    static index never becomes a traced checkpoint operand.
+    """
+    policy = None
+    if remat and cfg is not None and cfg.remat_save_outputs:
+        policy = jax.checkpoint_policies.save_only_these_names("sublayer_out")
+    if unroll:
+        ys = []
+        for i in range(L):
+            xi = jax.tree.map(lambda a: a[i], xs)
+            fn = (lambda c, x, i=i: body(c, (x, i)))
+            if remat:
+                fn = jax.checkpoint(fn, policy=policy)
+            carry, y = fn(carry, xi)
+            ys.append(y)
+        if ys and ys[0] is not None:
+            ys = jax.tree.map(lambda *zs: jnp.stack(zs), *ys)
+        else:
+            ys = None
+        return carry, ys
+    fn = jax.checkpoint(body, policy=policy) if remat else body
+    return lax.scan(lambda c, inp: fn(c, inp), carry, (xs, jnp.arange(L)))
+
+
+def _static_cond(pred, true_fn, false_fn, operand):
+    """lax.cond that collapses to a Python branch for static predicates."""
+    if isinstance(pred, (bool, int)):
+        return true_fn(operand) if pred else false_fn(operand)
+    return lax.cond(pred, true_fn, false_fn, operand)
+
+
+# ================================================================ forward
+
+
+def _embed_inputs(params, batch, cfg, constrain):
+    """Token (+ modality stub) embedding. Returns (B, S, D) activations."""
+    dt = cfg.activation_dtype
+    x = jnp.take(params["embed"], batch["tokens"], axis=0).astype(dt)
+    if cfg.modality == "vision" and "patch_embeds" in batch:
+        patches = jnp.einsum(
+            "bfe,ed->bfd", batch["patch_embeds"].astype(dt), params["vision_proj"].astype(dt)
+        )
+        x = jnp.concatenate([patches, x], axis=1)
+    return constrain(x, "act")
+
+
+def lm_forward(params, batch, cfg, *, mesh=None, constrain: Constrain = _IDENT, window=None):
+    """Train/prefill forward. batch: {tokens (B,S') [, patch_embeds]}.
+
+    Returns (logits (B,S,V) f32, aux_loss scalar)."""
+    x = _embed_inputs(params, batch, cfg, constrain)
+    B, S, D = x.shape
+    positions = jnp.arange(S)
+    fam = cfg.family
+
+    if fam in ("ssm", "hybrid"):
+        shared = params.get("shared_block")
+
+        def body(carry, inp):
+            x, aux = carry
+            lp, i = inp
+            if fam == "hybrid":
+                x = _static_cond(
+                    i % cfg.shared_attn_every == 0,
+                    lambda x: _shared_block_forward(shared, x, cfg, positions, constrain),
+                    lambda x: x,
+                    x,
+                )
+            h = ssm_mod.mamba2_block(lp["mamba"], rms_norm(x, lp["ln"], cfg.norm_eps), cfg, constrain=constrain)
+            return (constrain(x + h, "act"), aux), None
+
+        (x, aux), _ = _layer_scan(
+            body, (x, jnp.float32(0.0)), params["layers"],
+            cfg.num_layers, cfg.scan_unroll, remat=True, cfg=cfg,
+        )
+    else:
+
+        def body(carry, inp):
+            x, aux = carry
+            lp, _ = inp
+            attn_out = _pin_reduce(
+                attention_forward(
+                    lp["attn"], rms_norm(x, lp["ln1"], cfg.norm_eps), cfg, positions, constrain, window=window
+                ),
+                cfg,
+            )
+            if cfg.remat_save_outputs:
+                attn_out = _ckpt_name(attn_out, "sublayer_out")
+            h = x + attn_out
+            h = constrain(h, "act")
+            hin = rms_norm(h, lp["ln2"], cfg.norm_eps)
+            if fam == "moe":
+                delta, a = moe_block(lp["moe"], hin, cfg, mesh=mesh)
+                aux = aux + a
+            else:
+                delta = swiglu(
+                    hin,
+                    _wc(lp["mlp"]["w_gate"], "w_col", cfg, constrain, hin.dtype),
+                    _wc(lp["mlp"]["w_up"], "w_col", cfg, constrain, hin.dtype),
+                    _wc(lp["mlp"]["w_down"], "w_row", cfg, constrain, hin.dtype),
+                )
+            delta = _pin_reduce(delta, cfg)
+            if cfg.remat_save_outputs:
+                delta = _ckpt_name(delta, "sublayer_out")
+            return (constrain(h + delta, "act"), aux), None
+
+        (x, aux), _ = _layer_scan(
+            body, (x, jnp.float32(0.0)), params["layers"],
+            cfg.num_layers, cfg.scan_unroll, remat=True, cfg=cfg,
+        )
+
+    if cfg.bf16_cotangents:
+        x = _grad_cast_boundary(x, cfg.dtype)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum(
+        "bsd,vd->bsv",
+        x,
+        _wc(params["embed"], "w_embed", cfg, constrain, x.dtype),
+        preferred_element_type=jnp.float32,
+    )
+    logits = constrain(logits, "logits")
+    return logits, aux / cfg.num_layers
+
+
+def lm_loss(params, batch, cfg, *, mesh=None, constrain: Constrain = _IDENT, aux_weight=0.01, window=None):
+    """Next-token cross-entropy (+ MoE load-balance aux)."""
+    logits, aux = lm_forward(params, batch, cfg, mesh=mesh, constrain=constrain, window=window)
+    labels, mask = batch["labels"], batch["mask"].astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = (logz - picked) * mask
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    loss = jnp.sum(nll) / denom
+    total = loss + (aux_weight * aux if cfg.family == "moe" else 0.0)
+    return total, {"nll": loss, "aux": aux}
+
+
+def lm_prefill(params, batch, cfg, *, mesh=None, constrain: Constrain = _IDENT, context_len=None):
+    """Serving prefill: consume the whole prompt, return (last-token logits,
+    decode cache positioned at pos = S).  The cache layout matches
+    :func:`init_decode_cache` exactly (ring-rolled for sliding windows), so
+    ``lm_decode_step(params, cache, tok, pos=S, ...)`` continues seamlessly.
+    ``context_len`` > S pre-allocates linear (windowless) caches for further
+    decoding."""
+    x = _embed_inputs(params, batch, cfg, constrain)
+    B, S, D = x.shape
+    positions = jnp.arange(S)
+    fam = cfg.family
+    w = cfg.sliding_window
+    ctx = context_len or S
+
+    if fam in ("ssm", "hybrid"):
+        shared = params.get("shared_block")
+        Hk, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+        kv_len = min(S, w) if w else S
+
+        def body(carry, inp):
+            x = carry
+            lp, i = inp
+            skv = {
+                "k": jnp.zeros((B, kv_len, Hk, hd), x.dtype),
+                "v": jnp.zeros((B, kv_len, Hk, hd), x.dtype),
+            }
+            if fam == "hybrid":
+
+                def apply_shared(x):
+                    h = rms_norm(x, shared["ln1"], cfg.norm_eps)
+                    delta, (k, v) = attention_forward(
+                        shared["attn"], h, cfg, positions, constrain, return_kv=True
+                    )
+                    h2 = x + delta
+                    h2 = h2 + swiglu(
+                        rms_norm(h2, shared["ln2"], cfg.norm_eps),
+                        shared["mlp"]["w_gate"],
+                        shared["mlp"]["w_up"],
+                        shared["mlp"]["w_down"],
+                    )
+                    return h2, _kv_to_cache(k, v, w)
+
+                x, skv = _static_cond(
+                    i % cfg.shared_attn_every == 0, apply_shared, lambda x: (x, skv), x
+                )
+            h, c = ssm_mod.mamba2_block(
+                lp["mamba"], rms_norm(x, lp["ln"], cfg.norm_eps), cfg, constrain=constrain, return_cache=True
+            )
+            return constrain(x + h, "act"), (c, skv)
+
+        x, (ssm_cache, site_kv) = _layer_scan(
+            body, x, params["layers"], cfg.num_layers, cfg.scan_unroll
+        )
+        cache = {"ssm": ssm_cache}
+        if fam == "hybrid":
+            cache["shared_kv"] = jax.tree.map(lambda a: a[:: cfg.shared_attn_every], site_kv)
+    else:
+
+        def body(x, inp):
+            lp, _ = inp
+            delta, (k, v) = attention_forward(
+                lp["attn"], rms_norm(x, lp["ln1"], cfg.norm_eps), cfg, positions, constrain, return_kv=True
+            )
+            h = constrain(x + delta, "act")
+            hin = rms_norm(h, lp["ln2"], cfg.norm_eps)
+            if fam == "moe":
+                d, _ = moe_block(lp["moe"], hin, cfg, mesh=mesh)
+            else:
+                d = swiglu(
+                    hin,
+                    _wc(lp["mlp"]["w_gate"], "w_col", cfg, constrain, hin.dtype),
+                    _wc(lp["mlp"]["w_up"], "w_col", cfg, constrain, hin.dtype),
+                    _wc(lp["mlp"]["w_down"], "w_row", cfg, constrain, hin.dtype),
+                )
+            return constrain(h + d, "act"), _kv_to_cache(k, v, w)
+
+        x, kv = _layer_scan(body, x, params["layers"], cfg.num_layers, cfg.scan_unroll)
+        cache = {"kv": kv}
+
+    x = rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum(
+        "bsd,vd->bsv",
+        x,
+        _wc(params["embed"], "w_embed", cfg, constrain, x.dtype),
+        preferred_element_type=jnp.float32,
+    )
+    return constrain(logits, "logits"), cache
+
+
+# ================================================================= decode
+
+
+def init_decode_cache(cfg, batch: int, context_len: int, dtype=None) -> dict:
+    """Build the serve-time cache for ``context_len`` logical context.
+
+    Attention caches are ``min(context_len, window)`` long (ring buffer when
+    a sliding window is set); SSM layers carry O(1) state.  The cache also
+    tracks nothing else — the position is an explicit argument so the same
+    compiled step serves any position."""
+    dtype = dtype or cfg.activation_dtype
+    Hk, hd, L = cfg.num_kv_heads, cfg.resolved_head_dim, cfg.num_layers
+    w = cfg.sliding_window
+    kv_len = min(context_len, w) if w else context_len
+
+    def kv(n):
+        return {
+            "k": jnp.zeros((n, batch, kv_len, Hk, hd), dtype),
+            "v": jnp.zeros((n, batch, kv_len, Hk, hd), dtype),
+        }
+
+    fam = cfg.family
+    if fam == "ssm":
+        caches = [ssm_mod.init_mamba2_cache(cfg, batch, dtype) for _ in range(L)]
+        return {"ssm": jax.tree.map(lambda *xs: jnp.stack(xs), *caches)}
+    if fam == "hybrid":
+        caches = [ssm_mod.init_mamba2_cache(cfg, batch, dtype) for _ in range(L)]
+        n_sites = (L + cfg.shared_attn_every - 1) // cfg.shared_attn_every
+        return {
+            "ssm": jax.tree.map(lambda *xs: jnp.stack(xs), *caches),
+            "shared_kv": kv(n_sites),
+        }
+    return {"kv": kv(L)}
+
+
+def lm_decode_step(params, cache, tokens, pos, cfg, *, mesh=None, constrain: Constrain = _IDENT):
+    """One decode step. tokens: (B,1) int32; pos: scalar int32 (tokens
+    already generated/prefilled).  Returns (logits (B,1,V) f32, new cache)."""
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.activation_dtype)
+    x = constrain(x, "act")
+    B = x.shape[0]
+    fam = cfg.family
+
+    if fam in ("ssm", "hybrid"):
+        shared = params.get("shared_block")
+        shared_kv = cache.get("shared_kv")
+
+        def body(carry, inp):
+            x, skv = carry
+            (lp, c), i = inp
+
+            if fam == "hybrid":
+
+                def apply_shared(args):
+                    x, skv = args
+                    site = i // cfg.shared_attn_every
+                    site_cache = jax.tree.map(lambda a: a[site], skv)
+                    delta, new_site = attention_decode(
+                        shared["attn"],
+                        rms_norm(x, shared["ln1"], cfg.norm_eps),
+                        site_cache,
+                        pos,
+                        cfg,
+                        constrain,
+                        mesh=mesh,
+                    )
+                    h = x + delta
+                    h2 = h + swiglu(
+                        rms_norm(h, shared["ln2"], cfg.norm_eps),
+                        shared["mlp"]["w_gate"],
+                        shared["mlp"]["w_up"],
+                        shared["mlp"]["w_down"],
+                    )
+                    skv = jax.tree.map(
+                        lambda full, new: lax.dynamic_update_index_in_dim(full, new, site, 0),
+                        skv,
+                        new_site,
+                    )
+                    return h2, skv
+
+                x, skv = _static_cond(
+                    i % cfg.shared_attn_every == 0, apply_shared, lambda a: a, (x, skv)
+                )
+
+            y, c_new = ssm_mod.mamba2_decode(lp["mamba"], rms_norm(x[:, 0], lp["ln"], cfg.norm_eps), c, cfg)
+            return (x + y[:, None], skv), c_new
+
+        (x, shared_kv), new_ssm = _layer_scan(
+            body, (x, shared_kv), (params["layers"], cache["ssm"]),
+            cfg.num_layers, cfg.scan_unroll,
+        )
+        new_cache = {"ssm": new_ssm}
+        if fam == "hybrid":
+            new_cache["shared_kv"] = shared_kv
+    else:
+
+        def body(x, inp):
+            (lp, c), _ = inp
+            h, c_new = attention_decode(
+                lp["attn"], rms_norm(x, lp["ln1"], cfg.norm_eps), c, pos, cfg, constrain, mesh=mesh
+            )
+            h = x + h
+            hin = rms_norm(h, lp["ln2"], cfg.norm_eps)
+            if fam == "moe":
+                delta, _ = moe_block(lp["moe"], hin, cfg, mesh=mesh)
+            else:
+                delta = swiglu(
+                    hin,
+                    _wc(lp["mlp"]["w_gate"], "w_col", cfg, constrain, hin.dtype),
+                    _wc(lp["mlp"]["w_up"], "w_col", cfg, constrain, hin.dtype),
+                    _wc(lp["mlp"]["w_down"], "w_row", cfg, constrain, hin.dtype),
+                )
+            return constrain(h + delta, "act"), c_new
+
+        x, new_kv = _layer_scan(
+            body, x, (params["layers"], cache["kv"]), cfg.num_layers, cfg.scan_unroll
+        )
+        new_cache = {"kv": new_kv}
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum(
+        "bsd,vd->bsv",
+        x,
+        _wc(params["embed"], "w_embed", cfg, constrain, x.dtype),
+        preferred_element_type=jnp.float32,
+    )
+    return constrain(logits, "logits"), new_cache

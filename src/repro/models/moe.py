@@ -1,0 +1,230 @@
+"""Mixture-of-Experts block (Mixtral / Qwen2-MoE style).
+
+Distribution design (see DESIGN.md §4): the dispatch is the part GSPMD cannot
+be trusted to shard well — a global capacity-based scatter would either
+replicate the (E, C, D) dispatch tensor or psum it.  So the MoE interior runs
+under ``shard_map``: tokens stay LOCAL to their (pod, data) shard, routing /
+capacity / scatter are purely local (the paper's mapper-locality argument:
+per-shard statistics, no key-value shuffle), and the expert FFN is tensor-
+parallel over the ``model`` axis with one psum for the partial down-proj —
+the same collective cost as a dense Megatron MLP.
+
+The router's load-balance statistics (per-expert token fractions and mean
+probabilities) are ADDITIVE across shards and are combined with ``pmean`` —
+the exact key-value-free aggregation pattern of the paper (§4.3.2).
+
+On a single device (CPU smoke tests) the same local function runs without
+shard_map.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+from jax import shard_map
+
+DATA_AXES = ("pod", "data")
+
+
+def init_moe_params(key, cfg, dtype) -> dict:
+    d, f, e = cfg.d_model, cfg.resolved_moe_d_ff, cfg.num_experts
+    ks = jax.random.split(key, 5)
+    s_in = 1.0 / jnp.sqrt(d)
+    s_out = 1.0 / jnp.sqrt(f)
+    p = {
+        "w_router": (jax.random.normal(ks[0], (d, e)) * s_in).astype(jnp.float32),
+        "w_gate": (jax.random.normal(ks[1], (e, d, f)) * s_in).astype(dtype),
+        "w_up": (jax.random.normal(ks[2], (e, d, f)) * s_in).astype(dtype),
+        "w_down": (jax.random.normal(ks[3], (e, f, d)) * s_out).astype(dtype),
+    }
+    if cfg.num_shared_experts:
+        fs = f * cfg.num_shared_experts
+        k1, k2, k3 = jax.random.split(ks[4], 3)
+        p["w_shared_gate"] = (jax.random.normal(k1, (d, fs)) * s_in).astype(dtype)
+        p["w_shared_up"] = (jax.random.normal(k2, (d, fs)) * s_in).astype(dtype)
+        p["w_shared_down"] = (jax.random.normal(k3, (fs, d)) * s_out).astype(dtype)
+    return p
+
+
+def _local_moe(params, x, cfg, *, capacity_factor: float, model_axis: str | None):
+    """Local-token MoE. x: (T, D) tokens owned by this shard.
+
+    When ``model_axis`` is set we are inside shard_map: expert weights arrive
+    sliced on the hidden (f) dim and the down-proj partial sum is psum'd.
+    """
+    T, D = x.shape
+    E, k = cfg.num_experts, cfg.experts_per_token
+
+    logits = jnp.einsum("td,de->te", x.astype(jnp.float32), params["w_router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_e = lax.top_k(probs, k)  # (T,k)
+    top_w = top_w / jnp.sum(top_w, axis=-1, keepdims=True)
+
+    # ---- capacity dispatch (local; no cross-shard communication)
+    C = max(int(round(k * T / E * capacity_factor)), 1)
+    e_flat = top_e.reshape(-1)  # (T*k,)
+    w_flat = top_w.reshape(-1)
+    oh = jax.nn.one_hot(e_flat, E, dtype=jnp.int32)  # (T*k, E)
+    pos = jnp.cumsum(oh, axis=0) - oh  # position within expert
+    pos_of = jnp.take_along_axis(pos, e_flat[:, None], axis=1)[:, 0]
+    keep = pos_of < C
+    dest = e_flat * C + jnp.minimum(pos_of, C - 1)
+
+    x_rep = jnp.repeat(x, k, axis=0)  # (T*k, D)
+    x_disp = jnp.zeros((E * C, D), x.dtype).at[dest].add(
+        jnp.where(keep[:, None], x_rep, 0), mode="drop"
+    )
+    x_disp = x_disp.reshape(E, C, D)
+
+    # ---- expert FFN (hidden dim possibly sliced over the model axis)
+    wg, wu, wd = params["w_gate"], params["w_up"], params["w_down"]
+    g = jnp.einsum("ecd,edf->ecf", x_disp, wg.astype(x.dtype))
+    u = jnp.einsum("ecd,edf->ecf", x_disp, wu.astype(x.dtype))
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    y_disp = jnp.einsum("ecf,efd->ecd", h, wd.astype(x.dtype))
+    if model_axis is not None:
+        y_disp = lax.psum(y_disp, model_axis)
+
+    # ---- combine back to tokens
+    y_flat = y_disp.reshape(E * C, D)[dest]
+    y_flat = y_flat * (keep[:, None] * w_flat[:, None]).astype(x.dtype)
+    y = y_flat.reshape(T, k, D).sum(axis=1)
+
+    # ---- shared experts (dense; hidden also sliced over model axis)
+    if cfg.num_shared_experts:
+        sg = jnp.einsum("td,df->tf", x, params["w_shared_gate"].astype(x.dtype))
+        su = jnp.einsum("td,df->tf", x, params["w_shared_up"].astype(x.dtype))
+        sh = jax.nn.silu(sg.astype(jnp.float32)).astype(x.dtype) * su
+        ys = jnp.einsum("tf,fd->td", sh, params["w_shared_down"].astype(x.dtype))
+        if model_axis is not None:
+            ys = lax.psum(ys, model_axis)
+        y = y + ys
+
+    # ---- load-balance stats (additive across shards, psum'd by the caller)
+    frac = jnp.mean(jax.nn.one_hot(top_e, E, dtype=jnp.float32), axis=(0, 1))  # (E,)
+    pmean = jnp.mean(probs, axis=0)
+    aux = E * jnp.sum(frac * pmean)
+    return y, aux
+
+
+def _local_moe_decode(params, x, cfg, *, model_axis: str | None):
+    """Gather-based MoE for tiny token counts (decode): instead of capacity
+    dispatch (which would drop tokens at T ~ batch), gather each token's k
+    expert weight slices and compute them directly.  O(T * k) expert matmuls
+    — negligible next to attention at decode time."""
+    T, D = x.shape
+    E, k = cfg.num_experts, cfg.experts_per_token
+    logits = jnp.einsum("td,de->te", x.astype(jnp.float32), params["w_router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_e = lax.top_k(probs, k)
+    top_w = top_w / jnp.sum(top_w, axis=-1, keepdims=True)
+
+    wg = params["w_gate"][top_e]  # (T,k,D,F)
+    wu = params["w_up"][top_e]
+    wd = params["w_down"][top_e]  # (T,k,F,D)
+    g = jnp.einsum("td,tkdf->tkf", x, wg.astype(x.dtype))
+    u = jnp.einsum("td,tkdf->tkf", x, wu.astype(x.dtype))
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    y = jnp.einsum("tkf,tkfd,tk->td", h, wd.astype(x.dtype), top_w.astype(x.dtype))
+    if model_axis is not None:
+        y = lax.psum(y, model_axis)
+
+    if cfg.num_shared_experts:
+        sg = jnp.einsum("td,df->tf", x, params["w_shared_gate"].astype(x.dtype))
+        su = jnp.einsum("td,df->tf", x, params["w_shared_up"].astype(x.dtype))
+        sh = jax.nn.silu(sg.astype(jnp.float32)).astype(x.dtype) * su
+        ys = jnp.einsum("tf,fd->td", sh, params["w_shared_down"].astype(x.dtype))
+        if model_axis is not None:
+            ys = lax.psum(ys, model_axis)
+        y = y + ys
+
+    frac = jnp.mean(jax.nn.one_hot(top_e, E, dtype=jnp.float32), axis=(0, 1))
+    aux = E * jnp.sum(frac * jnp.mean(probs, axis=0))
+    return y, aux
+
+
+DECODE_GATHER_MAX_TOKENS = 256
+
+
+def moe_block(params, x, cfg, *, mesh=None, capacity_factor: float = 1.25):
+    """x: (B, S, D) -> (y, aux_loss).  mesh=None => single-device path."""
+    B, S, D = x.shape
+    xt = x.reshape(B * S, D)
+    if mesh is None:
+        if B * S <= DECODE_GATHER_MAX_TOKENS:
+            y, aux = _local_moe_decode(params, xt, cfg, model_axis=None)
+        else:
+            y, aux = _local_moe(params, xt, cfg, capacity_factor=capacity_factor, model_axis=None)
+        return y.reshape(B, S, D), aux
+
+    has_shared = cfg.num_shared_experts > 0
+    dp = tuple(a for a in DATA_AXES if a in mesh.axis_names)
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+    if (B * S) % dp_size:  # e.g. long_500k decode with batch 1: tokens can't
+        dp, dp_size = (), 1  # shard over data — replicate, TP-only interior
+    local_tokens = (B * S) // dp_size
+    tok_spec = P(dp if dp else None, None)
+
+    pspec = {
+        "w_router": P(None, None),
+        "w_gate": P(None, "data", "model"),
+        "w_up": P(None, "data", "model"),
+        "w_down": P(None, "model", "data"),
+    }
+    if has_shared:
+        pspec["w_shared_gate"] = P("data", "model")
+        pspec["w_shared_up"] = P("data", "model")
+        pspec["w_shared_down"] = P("model", "data")
+
+    gather_dtype = cfg.activation_dtype if cfg.bf16_weight_gather else None
+
+    def body(params, xt):
+        # manual FSDP: un-shard the weight's d_model dim over the data axis
+        # (bf16_weight_gather lever: cast the shard BEFORE gathering)
+        cast = (lambda w: w.astype(gather_dtype)) if gather_dtype else (lambda w: w)
+        p = dict(params)
+        p["w_gate"] = lax.all_gather(cast(params["w_gate"]), "data", axis=1, tiled=True)
+        p["w_up"] = lax.all_gather(cast(params["w_up"]), "data", axis=1, tiled=True)
+        p["w_down"] = lax.all_gather(cast(params["w_down"]), "data", axis=2, tiled=True)
+        if has_shared:
+            p["w_shared_gate"] = lax.all_gather(cast(params["w_shared_gate"]), "data", axis=0, tiled=True)
+            p["w_shared_up"] = lax.all_gather(cast(params["w_shared_up"]), "data", axis=0, tiled=True)
+            p["w_shared_down"] = lax.all_gather(cast(params["w_shared_down"]), "data", axis=1, tiled=True)
+        if local_tokens <= DECODE_GATHER_MAX_TOKENS:
+            y, aux = _local_moe_decode(p, xt, cfg, model_axis="model")
+        else:
+            y, aux = _local_moe(p, xt, cfg, capacity_factor=capacity_factor, model_axis="model")
+        aux = lax.pmean(aux, "model")
+        if dp:
+            aux = lax.pmean(aux, dp)
+        return y, aux
+
+    y, aux = shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(pspec, tok_spec),
+        out_specs=(tok_spec, P()),
+        check_vma=False,
+    )(params, xt)
+    return y.reshape(B, S, D), aux
+
+
+def moe_param_specs(cfg) -> dict:
+    """PartitionSpecs matching the shard_map in_specs above (used by the
+    global sharding rules so pjit in_shardings agree with the interior)."""
+    spec = {
+        "w_router": P(None, None),
+        "w_gate": P(None, "data", "model"),
+        "w_up": P(None, "data", "model"),
+        "w_down": P(None, "model", "data"),
+    }
+    if cfg.num_shared_experts:
+        spec["w_shared_gate"] = P("data", "model")
+        spec["w_shared_up"] = P("data", "model")
+        spec["w_shared_down"] = P("model", "data")
+    return spec

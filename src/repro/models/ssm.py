@@ -1,0 +1,212 @@
+"""Mamba2 / SSD (state-space duality) blocks [arXiv:2405.21060].
+
+Training/prefill uses the chunked SSD algorithm: the sequence is split into
+chunks of length L; within a chunk the recurrence is expanded as a masked
+(lower-triangular, decay-weighted) matmul (MXU-friendly), and across chunks a
+short ``lax.scan`` carries the (H, P, N) state.  This is the TPU-native
+adaptation of the paper's separability argument: chunk states are ADDITIVE
+sufficient statistics, exactly like the DFNTF mapper stats, so the sequential
+part is only S/L steps long.
+
+Decode uses the O(1) recurrent update: h <- exp(dt*A) h + dt * B ouFter x.
+
+Shapes follow the Mamba2 conventions with n_groups=1:
+  x (values):   (B, S, H, P)      P = ssm_head_dim
+  B, C:         (B, S, N)         N = ssm_state
+  dt:           (B, S, H)         softplus-positive step size
+  A:            (H,)              negative decay rate (stored as log)
+  D:            (H,)              skip
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.layers import rms_norm
+
+
+def _segsum(a: jax.Array) -> jax.Array:
+    """Stable segment-sum: out[..., i, j] = sum_{k=j+1..i} a[..., k] for i>=j,
+    -inf otherwise.  a: (..., L) -> (..., L, L)."""
+    L = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]  # sum over (j, i]
+    mask = jnp.tril(jnp.ones((L, L), bool), k=0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A_log, Bm, Cm, D, *, chunk: int, initial_state=None, unroll: bool = False):
+    """Chunked SSD scan.
+
+    x: (B,S,H,P), dt: (B,S,H), A_log: (H,), Bm/Cm: (B,S,N), D: (H,)
+    Returns y: (B,S,H,P), final_state: (B,H,P,N).
+    """
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+    chunk = min(chunk, S)
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+
+    f32 = jnp.float32
+    a = (dt.astype(f32) * (-jnp.exp(A_log.astype(f32)))[None, None])  # (B,S,H) negative
+    xdt = x.astype(f32) * dt.astype(f32)[..., None]  # (B,S,H,P) dt-weighted values
+
+    # reshape into chunks
+    ar = a.reshape(Bsz, nc, chunk, H)
+    xr = xdt.reshape(Bsz, nc, chunk, H, P)
+    Br = Bm.astype(f32).reshape(Bsz, nc, chunk, N)
+    Cr = Cm.astype(f32).reshape(Bsz, nc, chunk, N)
+
+    # ---- intra-chunk (dual / quadratic form): Y_intra = (C B^T * decay) Xdt
+    seg = _segsum(ar.transpose(0, 1, 3, 2))  # (B,nc,H,L,L)
+    decay = jnp.exp(seg)
+    scores = jnp.einsum("bcln,bcmn->bclm", Cr, Br)  # (B,nc,L,L)
+    y_intra = jnp.einsum("bclm,bchlm,bcmhp->bclhp", scores, decay, xr)
+
+    # ---- chunk states: additive sufficient stats per chunk
+    cum = jnp.cumsum(ar, axis=2)  # (B,nc,L,H)
+    tail = cum[:, :, -1:, :] - cum  # decay from position l to end of chunk
+    w = jnp.exp(tail)  # (B,nc,L,H)
+    states = jnp.einsum("bcln,bclh,bclhp->bchpn", Br, w, xr)  # (B,nc,H,P,N)
+
+    # ---- inter-chunk recurrence over nc chunks (short sequential scan)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])  # (B,nc,H) total decay of chunk
+
+    if initial_state is None:
+        h0 = jnp.zeros((Bsz, H, P, N), f32)
+    else:
+        h0 = initial_state.astype(f32)
+
+    def step(h, inp):
+        st, dk = inp  # (B,H,P,N), (B,H)
+        h_out = h  # state BEFORE this chunk
+        h_new = h * dk[..., None, None] + st
+        return h_new, h_out
+
+    hT, h_prev = lax.scan(
+        step,
+        h0,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)),
+        unroll=True if unroll else 1,
+    )
+    h_prev = h_prev.transpose(1, 0, 2, 3, 4)  # (B,nc,H,P,N) state entering each chunk
+
+    # ---- contribution of carried state into each chunk
+    into = jnp.exp(cum)  # decay from chunk start to position l (inclusive)
+    y_inter = jnp.einsum("bcln,bclh,bchpn->bclhp", Cr, into, h_prev)
+
+    skip = x.astype(f32).reshape(Bsz, nc, chunk, H, P) * D.astype(f32)[None, None, None, :, None]
+    y = y_intra + y_inter + skip
+    return y.reshape(Bsz, S, H, P).astype(x.dtype), hT.astype(x.dtype)
+
+
+def ssd_decode_step(h, x, dt, A_log, Bm, Cm, D):
+    """One-token recurrent update.
+
+    h: (B,H,P,N) carried state; x: (B,H,P); dt: (B,H); Bm/Cm: (B,N).
+    Returns y: (B,H,P), h_new.
+    """
+    f32 = jnp.float32
+    a = jnp.exp(dt.astype(f32) * (-jnp.exp(A_log.astype(f32)))[None])  # (B,H)
+    xdt = x.astype(f32) * dt.astype(f32)[..., None]  # (B,H,P)
+    h_new = h.astype(f32) * a[..., None, None] + jnp.einsum("bhp,bn->bhpn", xdt, Bm.astype(f32))
+    y = jnp.einsum("bhpn,bn->bhp", h_new, Cm.astype(f32)) + x.astype(f32) * D.astype(f32)[None, :, None]
+    return y.astype(x.dtype), h_new.astype(x.dtype)
+
+
+# --------------------------------------------------------------- full block
+
+
+def _causal_conv(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Depthwise causal conv. x: (B,S,C), w: (K,C)."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for k in range(K):
+        out = out + xp[:, k : k + x.shape[1]].astype(jnp.float32) * w[k].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def init_mamba2_params(key, cfg, dtype) -> dict:
+    d, di, N = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    H = cfg.ssm_heads
+    conv_dim = di + 2 * N
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s_in = 1.0 / jnp.sqrt(d)
+    return {
+        # in_proj -> [z (gate), x, B, C, dt]
+        "w_in": (jax.random.normal(k1, (d, 2 * di + 2 * N + H)) * s_in).astype(dtype),
+        "conv_w": (jax.random.normal(k2, (cfg.ssm_conv, conv_dim)) * 0.1).astype(dtype),
+        "A_log": jnp.zeros((H,), jnp.float32),  # A = -exp(0) = -1
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "norm_scale": jnp.zeros((di,), jnp.float32),
+        "w_out": (jax.random.normal(k3, (di, d)) * (1.0 / jnp.sqrt(di))).astype(dtype),
+    }
+
+
+def mamba2_block(params, x, cfg, *, constrain=lambda t, kind: t, return_cache=False):
+    """Full Mamba2 mixer over a sequence.  x: (B,S,d_model).
+
+    With ``return_cache`` also returns {state, conv} in the decode-cache
+    layout (final SSD state + last conv-window inputs)."""
+    B, S, d = x.shape
+    di, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    w_in = params["w_in"].astype(x.dtype)
+    if cfg.bf16_weight_gather:
+        w_in = constrain(w_in, "w_col")
+    proj = jnp.einsum("bsd,de->bse", x, w_in)
+    z, xv, Bm, Cm, dt = jnp.split(proj, [di, 2 * di, 2 * di + N, 2 * di + 2 * N], axis=-1)
+    conv_in = jnp.concatenate([xv, Bm, Cm], axis=-1)
+    conv_out = jax.nn.silu(_causal_conv(conv_in, params["conv_w"]).astype(jnp.float32)).astype(x.dtype)
+    xv, Bm, Cm = jnp.split(conv_out, [di, di + N], axis=-1)
+    xv = constrain(xv.reshape(B, S, H, P), "ssm_x")
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"][None, None])
+    y, hT = ssd_chunked(
+        xv, dt.astype(x.dtype), params["A_log"], Bm, Cm, params["D"],
+        chunk=cfg.ssm_chunk, unroll=cfg.inner_unroll,
+    )
+    y = y.reshape(B, S, di)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype), params["norm_scale"], cfg.norm_eps)
+    w_out = params["w_out"].astype(x.dtype)
+    if cfg.bf16_weight_gather:
+        w_out = constrain(w_out, "w_row")
+    out = jnp.einsum("bse,ed->bsd", y, w_out)
+    if return_cache:
+        K = cfg.ssm_conv
+        cache = {"state": hT, "conv": conv_in[:, S - (K - 1) :]}
+        return out, cache
+    return out
+
+
+def init_mamba2_cache(cfg, batch, dtype) -> dict:
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    conv_dim = cfg.d_inner + 2 * N
+    return {
+        "state": jnp.zeros((batch, H, P, N), dtype),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), dtype),
+    }
+
+
+def mamba2_decode(params, x, cache, cfg):
+    """One-token step. x: (B,d_model), cache: {state, conv} -> (y, cache)."""
+    B, d = x.shape
+    di, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    proj = jnp.einsum("bd,de->be", x, params["w_in"].astype(x.dtype))
+    z, xv, Bm, Cm, dt = jnp.split(proj, [di, 2 * di, 2 * di + N, 2 * di + 2 * N], axis=-1)
+    conv_in = jnp.concatenate([xv, Bm, Cm], axis=-1)  # (B, conv_dim)
+    window = jnp.concatenate([cache["conv"], conv_in[:, None]], axis=1)  # (B,K,conv)
+    w = params["conv_w"]
+    conv_out = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32), w.astype(jnp.float32))
+    conv_out = jax.nn.silu(conv_out).astype(x.dtype)
+    xv, Bm, Cm = jnp.split(conv_out, [di, di + N], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"][None])
+    y, h_new = ssd_decode_step(
+        cache["state"], xv.reshape(B, H, P), dt.astype(x.dtype), params["A_log"], Bm, Cm, params["D"]
+    )
+    y = y.reshape(B, di)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype), params["norm_scale"], cfg.norm_eps)
+    out = jnp.einsum("be,ed->bd", y, params["w_out"].astype(x.dtype))
+    new_cache = {"state": h_new, "conv": window[:, 1:]}
+    return out, new_cache

@@ -1,0 +1,12 @@
+from repro.optim.lbfgs import LBFGSResult, minimize
+from repro.optim.optimizers import (
+    Optimizer, adam, apply_updates, chain, clip_by_global_norm, scale,
+    scale_by_schedule, sgd,
+)
+from repro.optim import schedules
+
+__all__ = [
+    "LBFGSResult", "Optimizer", "adam", "apply_updates", "chain",
+    "clip_by_global_norm", "minimize", "scale", "scale_by_schedule",
+    "schedules", "sgd",
+]

@@ -1,0 +1,184 @@
+"""Jittable L-BFGS with two-loop recursion and Armijo backtracking.
+
+The paper optimizes the tight bound with "gradient descent and L-BFGS"
+(§4.3.1).  This implementation works on arbitrary parameter pytrees via
+ravel/unravel, keeps a fixed-size circular (s, y) history so the whole
+optimization is a single lax.while_loop, and is reverse-mode safe.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.flatten_util import ravel_pytree
+
+
+class LBFGSResult(NamedTuple):
+    params: Any
+    value: jax.Array
+    grad_norm: jax.Array
+    iterations: jax.Array
+    converged: jax.Array
+
+
+def _two_loop(s_hist, y_hist, rho_hist, head, count, grad):
+    """Two-loop recursion over the circular history buffers."""
+    m = s_hist.shape[0]
+
+    def idx_at(i):
+        # i = 0 is most recent
+        return (head - 1 - i) % m
+
+    def first_loop(i, carry):
+        q, alphas = carry
+        j = idx_at(i)
+        valid = i < count
+        alpha = jnp.where(valid, rho_hist[j] * jnp.dot(s_hist[j], q), 0.0)
+        q = q - alpha * y_hist[j] * valid
+        return q, alphas.at[i].set(alpha)
+
+    q, alphas = jax.lax.fori_loop(0, m, first_loop, (grad, jnp.zeros((m,), grad.dtype)))
+    # initial Hessian scaling gamma = s.y / y.y from most recent pair
+    jr = idx_at(0)
+    sy = jnp.dot(s_hist[jr], y_hist[jr])
+    yy = jnp.dot(y_hist[jr], y_hist[jr])
+    gamma = jnp.where(count > 0, sy / jnp.maximum(yy, 1e-30), 1.0)
+    r = gamma * q
+
+    def second_loop(i2, r):
+        i = m - 1 - i2  # reverse order
+        j = idx_at(i)
+        valid = i < count
+        beta = jnp.where(valid, rho_hist[j] * jnp.dot(y_hist[j], r), 0.0)
+        return r + (alphas[i] - beta) * s_hist[j] * valid
+
+    return jax.lax.fori_loop(0, m, second_loop, r)
+
+
+def minimize(
+    fun: Callable[[Any], jax.Array],
+    x0: Any,
+    *,
+    history: int = 10,
+    max_iters: int = 100,
+    tol: float = 1e-6,
+    max_linesearch: int = 20,
+    armijo_c1: float = 1e-4,
+    init_step: float = 1.0,
+) -> LBFGSResult:
+    """Minimize ``fun`` (scalar) over a pytree.  Jittable end to end."""
+    flat0, unravel = ravel_pytree(x0)
+    n = flat0.shape[0]
+    dtype = flat0.dtype
+
+    value_and_grad = jax.value_and_grad(lambda flat: fun(unravel(flat)))
+
+    def line_search(flat, value, grad, direction):
+        """Weak-Wolfe search: backtrack until Armijo holds, then expand while
+        the curvature condition d.g_new >= c2 d.g still fails.  Guarantees the
+        accepted pair has s^T y > 0 (so the L-BFGS history stays PD)."""
+        c2 = 0.9
+        dg = jnp.dot(direction, grad)
+        # fall back to steepest descent if not a descent direction
+        bad = dg >= 0
+        direction = jnp.where(bad, -grad, direction)
+        dg = jnp.where(bad, -jnp.dot(grad, grad), dg)
+
+        def probe(step):
+            nf, ng = value_and_grad(flat + step * direction)
+            armijo = jnp.logical_and(
+                jnp.isfinite(nf), nf <= value + armijo_c1 * step * dg
+            )
+            curv = jnp.dot(direction, ng) >= c2 * dg
+            return nf, ng, armijo, curv
+
+        class LS(NamedTuple):
+            step: jax.Array
+            best_step: jax.Array
+            best_val: jax.Array
+            best_grad: jax.Array
+            have_best: jax.Array
+            done: jax.Array
+            tries: jax.Array
+
+        def cond(s: LS):
+            return jnp.logical_and(~s.done, s.tries < max_linesearch)
+
+        def body(s: LS):
+            nf, ng, armijo, curv = probe(s.step)
+            take = armijo  # any Armijo point improves on what we have
+            best_step = jnp.where(take, s.step, s.best_step)
+            best_val = jnp.where(take, nf, s.best_val)
+            best_grad = jnp.where(take, ng, s.best_grad)
+            have_best = jnp.logical_or(s.have_best, take)
+            done = jnp.logical_and(armijo, curv)
+            # expand if Armijo ok but curvature slope still too negative;
+            # once expansion breaks Armijo, settle for the best Armijo point.
+            hit_ceiling = jnp.logical_and(~armijo, s.have_best)
+            next_step = jnp.where(armijo, s.step * 2.0, s.step * 0.5)
+            done = jnp.logical_or(done, hit_ceiling)
+            return LS(next_step, best_step, best_val, best_grad, have_best, done, s.tries + 1)
+
+        init = LS(
+            jnp.asarray(init_step, dtype), jnp.asarray(0.0, dtype), value, grad,
+            jnp.asarray(False), jnp.asarray(False), jnp.asarray(0),
+        )
+        out = jax.lax.while_loop(cond, body, init)
+        keep = out.have_best
+        new_flat = jnp.where(keep, flat + out.best_step * direction, flat)
+        return new_flat, out.best_val, out.best_grad, keep
+
+    class State(NamedTuple):
+        flat: jax.Array
+        value: jax.Array
+        grad: jax.Array
+        s_hist: jax.Array
+        y_hist: jax.Array
+        rho_hist: jax.Array
+        head: jax.Array
+        count: jax.Array
+        it: jax.Array
+        done: jax.Array
+
+    v0, g0 = value_and_grad(flat0)
+    init = State(
+        flat0, v0, g0,
+        jnp.zeros((history, n), dtype), jnp.zeros((history, n), dtype),
+        jnp.zeros((history,), dtype), jnp.asarray(0), jnp.asarray(0),
+        jnp.asarray(0), jnp.asarray(False),
+    )
+
+    def cond(st: State):
+        return jnp.logical_and(~st.done, st.it < max_iters)
+
+    def body(st: State):
+        direction = -_two_loop(st.s_hist, st.y_hist, st.rho_hist, st.head, st.count, st.grad)
+        new_flat, new_val, new_grad, ok = line_search(st.flat, st.value, st.grad, direction)
+        s = new_flat - st.flat
+        yv = new_grad - st.grad
+        sy = jnp.dot(s, yv)
+        accept = jnp.logical_and(ok, sy > 1e-10)
+        head, count = st.head, st.count
+        s_hist = jnp.where(accept, st.s_hist.at[head].set(s), st.s_hist)
+        y_hist = jnp.where(accept, st.y_hist.at[head].set(yv), st.y_hist)
+        rho_hist = jnp.where(
+            accept, st.rho_hist.at[head].set(1.0 / jnp.maximum(sy, 1e-30)), st.rho_hist
+        )
+        head = jnp.where(accept, (head + 1) % history, head)
+        count = jnp.where(accept, jnp.minimum(count + 1, history), count)
+        gnorm = jnp.max(jnp.abs(new_grad))
+        done = jnp.logical_or(gnorm < tol, ~ok)
+        return State(
+            new_flat, new_val, new_grad, s_hist, y_hist, rho_hist, head, count,
+            st.it + 1, done,
+        )
+
+    final = jax.lax.while_loop(cond, body, init)
+    return LBFGSResult(
+        params=unravel(final.flat),
+        value=final.value,
+        grad_norm=jnp.max(jnp.abs(final.grad)),
+        iterations=final.it,
+        converged=final.done,
+    )

@@ -1,0 +1,120 @@
+"""Minimal optax-style gradient-transformation optimizers (pure JAX).
+
+The paper's outer loop is gradient descent or L-BFGS on the tight bound; we
+additionally provide Adam (used by the model-zoo trainer).  All transforms
+operate on arbitrary pytrees and are jit/scan-safe.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], tuple[Any, Any]]  # (grads, state, params)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p + u).astype(p.dtype), params, updates)
+
+
+def chain(*transforms: Optimizer) -> Optimizer:
+    def init(params):
+        return tuple(t.init(params) for t in transforms)
+
+    def update(grads, state, params=None):
+        new_state = []
+        for t, s in zip(transforms, state):
+            grads, s = t.update(grads, s, params)
+            new_state.append(s)
+        return grads, tuple(new_state)
+
+    return Optimizer(init, update)
+
+
+def scale(factor: float) -> Optimizer:
+    return Optimizer(
+        init=lambda params: (),
+        update=lambda g, s, p=None: (jax.tree.map(lambda x: factor * x, g), s),
+    )
+
+
+def scale_by_schedule(schedule: Callable[[jax.Array], jax.Array]) -> Optimizer:
+    def init(params):
+        return jnp.zeros((), jnp.int32)
+
+    def update(grads, count, params=None):
+        factor = schedule(count)
+        return jax.tree.map(lambda x: factor * x, grads), count + 1
+
+    return Optimizer(init, update)
+
+
+def clip_by_global_norm(max_norm: float) -> Optimizer:
+    def update(grads, state, params=None):
+        leaves = jax.tree.leaves(grads)
+        norm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+        factor = jnp.minimum(1.0, max_norm / (norm + 1e-12))
+        return jax.tree.map(lambda g: factor * g, grads), state
+
+    return Optimizer(init=lambda p: (), update=update)
+
+
+def sgd(learning_rate: float, momentum: float = 0.0) -> Optimizer:
+    if momentum == 0.0:
+        return scale(-learning_rate)
+
+    def init(params):
+        return jax.tree.map(jnp.zeros_like, params)
+
+    def update(grads, mom, params=None):
+        mom = jax.tree.map(lambda m, g: momentum * m + g, mom, grads)
+        return jax.tree.map(lambda m: -learning_rate * m, mom), mom
+
+    return Optimizer(init, update)
+
+
+class AdamState(NamedTuple):
+    count: jax.Array
+    mu: Any
+    nu: Any
+
+
+def adam(
+    learning_rate: float | Callable[[jax.Array], jax.Array],
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+) -> Optimizer:
+    """Adam(W).  Moments are kept in f32 regardless of param dtype."""
+
+    def init(params):
+        f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return AdamState(jnp.zeros((), jnp.int32), jax.tree.map(f32, params), jax.tree.map(f32, params))
+
+    def update(grads, state, params=None):
+        count = state.count + 1
+        g32 = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state.mu, g32)
+        nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, state.nu, g32)
+        bc1 = 1 - b1**count.astype(jnp.float32)
+        bc2 = 1 - b2**count.astype(jnp.float32)
+        lr = learning_rate(count) if callable(learning_rate) else learning_rate
+
+        def step(m, v, p):
+            upd = -lr * (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            if weight_decay and p is not None:
+                upd = upd - lr * weight_decay * p.astype(jnp.float32)
+            return upd
+
+        if params is None:
+            updates = jax.tree.map(lambda m, v: step(m, v, None), mu, nu)
+        else:
+            updates = jax.tree.map(step, mu, nu, params)
+        return updates, AdamState(count, mu, nu)
+
+    return Optimizer(init, update)

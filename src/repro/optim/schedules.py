@@ -1,0 +1,31 @@
+"""Learning-rate schedules (step-count -> multiplier or lr)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(value: float):
+    return lambda count: jnp.asarray(value, jnp.float32)
+
+
+def linear_warmup_cosine(peak_lr: float, warmup_steps: int, total_steps: int, floor: float = 0.0):
+    def schedule(count):
+        count = count.astype(jnp.float32)
+        warm = peak_lr * count / max(warmup_steps, 1)
+        progress = jnp.clip(
+            (count - warmup_steps) / max(total_steps - warmup_steps, 1), 0.0, 1.0
+        )
+        cos = floor + (peak_lr - floor) * 0.5 * (1.0 + jnp.cos(jnp.pi * progress))
+        return jnp.where(count < warmup_steps, warm, cos)
+
+    return schedule
+
+
+def inverse_sqrt(peak_lr: float, warmup_steps: int):
+    def schedule(count):
+        count = jnp.maximum(count.astype(jnp.float32), 1.0)
+        warm = peak_lr * count / max(warmup_steps, 1)
+        decay = peak_lr * jnp.sqrt(warmup_steps / count)
+        return jnp.where(count < warmup_steps, warm, decay)
+
+    return schedule

@@ -1,0 +1,3 @@
+from repro.roofline.constants import TPU_V5E
+from repro.roofline.hlo import collective_bytes
+from repro.roofline.report import RooflineResult, analyze_compiled

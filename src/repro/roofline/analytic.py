@@ -1,0 +1,193 @@
+"""Analytic FLOP / HBM-byte model for the roofline terms.
+
+WHY ANALYTIC: XLA's HloCostAnalysis counts each ``while`` body ONCE,
+regardless of trip count.  Our production programs are loops at three levels
+(microbatches, layers, attention/SSD chunks), so ``compiled.cost_analysis()``
+under-reports by the product of the trip counts.  Unrolling everything makes
+the cost analysis exact but is compile-time-prohibitive at the full scale
+(52-80 layers x 64+ attention chunks x 512 partitions, single build CPU).
+
+So: FLOPs and HBM bytes come from this closed-form model of EXACTLY the
+schedule the model code executes (same chunk counts, same causal block
+skipping, same MoE capacity, same remat policy), and the model is VALIDATED
+against ``cost_analysis()`` on shrunken configs compiled with every loop
+unrolled (tests/test_roofline.py + EXPERIMENTS.md §Dry-run methodology).
+Collective bytes and the memory footprint stay HLO-derived (loop-free after
+layer-probe extrapolation / reported by memory_analysis directly).
+
+Conventions:
+  * only matmul/conv FLOPs (2mnk) are counted — elementwise/softmax terms
+    are O(1/hd) relative and are in the validation tolerance;
+  * train factor per op: fwd 2mnk + bwd 4mnk + remat-recompute 2mnk = 4x the
+    fwd cost for everything inside a checkpointed layer, 3x outside (no
+    recompute: embedding/logits/loss);
+  * HBM bytes model: parameter traffic (FSDP-gathered per use, f32 master),
+    optimizer state traffic, activation tile streams of the chunked
+    attention/SSD schedules, logits, and KV-cache/state traffic at decode.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+from repro.configs import ArchConfig, ShapeConfig
+
+ACT_BYTES = 2  # bf16 activations
+P_BYTES = 4  # f32 master params
+
+
+@dataclasses.dataclass
+class OpCounts:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+
+    def __add__(self, o):
+        return OpCounts(self.flops + o.flops, self.hbm_bytes + o.hbm_bytes)
+
+    def scale(self, f):
+        return OpCounts(self.flops * f, self.hbm_bytes * f)
+
+
+def _attention_tiles(S: int, qc: int, kc: int, window: int, causal: bool = True) -> int:
+    """Number of (qc x kc) tiles the chunked schedule computes (matches
+    repro.models.layers.chunked_attention exactly)."""
+    nq = S // qc
+    if window > 0:
+        span = qc + ((window + kc - 1) // kc) * kc
+        span = min(span, S)
+        return nq * (span // kc)
+    # causal: q chunk iq attends kv chunks 0..iq
+    return nq * (nq + 1) // 2 if causal else nq * (S // kc)
+
+
+def _attn_core(cfg: ArchConfig, B: int, S: int, qc: int, window: int) -> OpCounts:
+    """Score+value matmuls of one attention layer (fwd), flash schedule."""
+    H, hd = cfg.num_heads, cfg.resolved_head_dim
+    Hk = cfg.num_kv_heads
+    tiles = _attention_tiles(S, qc, qc, window)
+    flops = 4.0 * B * H * hd * qc * qc * tiles  # qk^T + pv
+    # HBM: q read once per q-chunk row; k/v re-streamed per q chunk (tiles)
+    bytes_ = ACT_BYTES * B * (H * hd * S + 2 * Hk * hd * qc * tiles)
+    return OpCounts(flops, bytes_)
+
+
+def _linear(T: float, d_in: int, d_out: int) -> OpCounts:
+    """One dense matmul over T tokens (fwd): weight re-read per use (FSDP)."""
+    return OpCounts(2.0 * T * d_in * d_out, ACT_BYTES * T * (d_in + d_out) + P_BYTES * d_in * d_out)
+
+
+def _layer_fwd(cfg: ArchConfig, B: int, S: int, mode: str) -> OpCounts:
+    """Forward cost of ONE layer over (B, S) tokens (S=1 w/ cache for decode)."""
+    d, f = cfg.d_model, cfg.d_ff
+    H, Hk, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    T = B * S
+    c = OpCounts()
+    fam = cfg.family
+
+    if fam in ("ssm", "hybrid"):
+        di, N, Hs, Ps = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+        conv_dim = di + 2 * N
+        c += _linear(T, d, 2 * di + 2 * N + Hs)  # in_proj
+        c += OpCounts(2.0 * T * conv_dim * cfg.ssm_conv, ACT_BYTES * T * 2 * conv_dim)
+        if mode == "decode":
+            # recurrent update: h <- a h + dt B x ; y = C h  (2 x HPN each)
+            c += OpCounts(6.0 * B * Hs * Ps * N, 2 * ACT_BYTES * B * Hs * Ps * N)
+        else:
+            L = min(cfg.ssm_chunk, S)
+            nc = S // L
+            intra = 2.0 * B * nc * L * L * (N + Hs * Ps)  # scores + y_intra
+            states = 2.0 * B * nc * L * Hs * Ps * N * 2  # states + y_inter
+            c += OpCounts(intra + states, ACT_BYTES * T * 3 * di)
+        c += _linear(T, di, d)  # out_proj
+        if fam == "hybrid":
+            # shared attention+MLP block amortized: applied every k-th layer.
+            # (Decode-time shared attention over the cache is added by
+            # analytic_costs via _decode_attn, scaled by n_sites/L.)
+            share = 1.0 / cfg.shared_attn_every
+            blk = _linear(T, d, (H + 2 * Hk) * hd) + _linear(T, H * hd, d)
+            blk += _linear(T, d, 2 * f) + _linear(T, f, d)
+            if mode != "decode":
+                blk += _attn_core(cfg, B, S, min(512, S), cfg.sliding_window)
+            c += blk.scale(share)
+        return c
+
+    # attention families
+    c += _linear(T, d, (H + 2 * Hk) * hd)  # fused qkv
+    if mode == "decode":
+        Sc = 0  # filled by caller via decode_cache_len
+    else:
+        c += _attn_core(cfg, B, S, min(512, S), cfg.sliding_window)
+    c += _linear(T, H * hd, d)  # wo
+
+    if fam == "moe":
+        E, k, fe = cfg.num_experts, cfg.experts_per_token, cfg.resolved_moe_d_ff
+        c += _linear(T, d, E)  # router
+        eff_tokens = k * T if mode == "decode" else 1.25 * k * T  # capacity
+        c += _linear(eff_tokens, d, 2 * fe) + _linear(eff_tokens, fe, d)
+        if cfg.num_shared_experts:
+            fs = fe * cfg.num_shared_experts
+            c += _linear(T, d, 2 * fs) + _linear(T, fs, d)
+    else:
+        c += _linear(T, d, 2 * f) + _linear(T, f, d)
+    return c
+
+
+def _decode_attn(cfg: ArchConfig, B: int, cache_len: int) -> OpCounts:
+    H, Hk, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    flops = 4.0 * B * H * hd * cache_len
+    bytes_ = 2 * ACT_BYTES * B * Hk * hd * cache_len  # read k+v cache
+    return OpCounts(flops, bytes_)
+
+
+def analytic_costs(cfg: ArchConfig, shape: ShapeConfig, *, chips: int = 256) -> dict:
+    """Per-chip {flops, hbm_bytes} for the step this shape lowers."""
+    B, S = shape.global_batch, shape.seq_len
+    mode = shape.mode
+    V, d, L = cfg.vocab_size, cfg.d_model, cfg.num_layers
+    n_params = cfg.param_count()
+
+    if mode == "train":
+        per_layer = _layer_fwd(cfg, B, S, mode).scale(4.0)  # fwd+remat+bwd
+        head = _linear(B * S, d, V).scale(3.0)  # logits fwd+bwd (no remat)
+        total = per_layer.scale(L) + head
+        if cfg.modality == "vision":
+            total += _linear(B * cfg.frontend_tokens, 1024, d).scale(3.0)
+        # optimizer: ~16 flops/param, m/v/p read+write f32
+        total += OpCounts(16.0 * n_params, 10.0 * P_BYTES * n_params)
+        # loss softmax traffic over logits
+        total += OpCounts(0.0, 4 * 4.0 * B * S * V / 2)
+    elif mode == "prefill":
+        per_layer = _layer_fwd(cfg, B, S, mode)
+        head = _linear(B, d, V)  # last position only
+        total = per_layer.scale(L) + head
+        if cfg.modality == "vision":
+            total += _linear(B * cfg.frontend_tokens, 1024, d)
+        # prefill emits the kv/state cache
+        total += OpCounts(0.0, _cache_bytes(cfg, B, S))
+    else:  # decode
+        cache_len = min(S, cfg.sliding_window) if cfg.sliding_window else S
+        per_layer = _layer_fwd(cfg, B, 1, mode)
+        if cfg.family not in ("ssm",):
+            if cfg.family == "hybrid":
+                sc = min(S, cfg.sliding_window or S)
+                n_sites = (L + cfg.shared_attn_every - 1) // cfg.shared_attn_every
+                per_layer += _decode_attn(cfg, B, sc).scale(n_sites / L)
+            else:
+                per_layer += _decode_attn(cfg, B, cache_len)
+        head = _linear(B, d, V)
+        total = per_layer.scale(L) + head
+
+    return {"flops": total.flops / chips, "hbm_bytes": total.hbm_bytes / chips}
+
+
+def _cache_bytes(cfg: ArchConfig, B: int, S: int) -> float:
+    L = cfg.num_layers
+    if cfg.family == "ssm":
+        return ACT_BYTES * L * B * cfg.ssm_heads * cfg.ssm_head_dim * cfg.ssm_state
+    kv_len = min(S, cfg.sliding_window) if cfg.sliding_window else S
+    kv = 2 * ACT_BYTES * B * kv_len * cfg.num_kv_heads * cfg.resolved_head_dim
+    if cfg.family == "hybrid":
+        n_sites = (L + cfg.shared_attn_every - 1) // cfg.shared_attn_every
+        ssm = ACT_BYTES * L * B * cfg.ssm_heads * cfg.ssm_head_dim * cfg.ssm_state
+        return ssm + n_sites * kv
+    return L * kv

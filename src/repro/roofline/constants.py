@@ -1,0 +1,22 @@
+"""Target-hardware constants for the roofline model (TPU v5e)."""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class Chip:
+    name: str
+    peak_flops_bf16: float  # FLOP/s
+    hbm_bw: float  # B/s
+    ici_link_bw: float  # B/s per link
+    hbm_bytes: float
+
+
+TPU_V5E = Chip(
+    name="tpu-v5e",
+    peak_flops_bf16=197e12,
+    hbm_bw=819e9,
+    ici_link_bw=50e9,
+    hbm_bytes=16 * 1024**3,
+)

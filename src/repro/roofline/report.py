@@ -1,0 +1,147 @@
+"""Three-term roofline analysis of a compiled (dry-run) step.
+
+  compute    = HLO_FLOPs_per_chip / peak_FLOP/s
+  memory     = HLO_bytes_per_chip / HBM_bw
+  collective = link_bytes_per_chip / ICI_link_bw
+
+``compiled.cost_analysis()`` runs on the post-partitioning per-device
+module, so its flops/bytes are already per chip.  MODEL_FLOPS uses the
+6·N·D (train) / 2·N·D (inference) convention with N = active params, D =
+processed tokens; the ratio MODEL_FLOPS / (HLO_FLOPs × chips) exposes
+remat/capacity/causal-masking overheads.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any
+
+from repro.roofline.constants import TPU_V5E, Chip
+from repro.roofline.hlo import collective_bytes, collective_link_bytes
+
+
+@dataclasses.dataclass
+class RooflineResult:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    # raw per-chip measurements
+    flops_per_chip: float
+    hbm_bytes_per_chip: float
+    coll_bytes_by_kind: dict[str, int]
+    link_bytes_per_chip: float
+    # memory analysis (per chip)
+    arg_bytes: int
+    output_bytes: int
+    temp_bytes: int
+    peak_bytes: int
+    # derived terms (seconds)
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    bottleneck: str
+    # usefulness
+    model_flops: float
+    useful_ratio: float
+    microbatches: int = 1
+    variant: str = ""
+
+    def to_json(self) -> str:
+        return json.dumps(dataclasses.asdict(self), indent=2)
+
+    @property
+    def step_time(self) -> float:
+        """Roofline step-time estimate: max of the three terms (perfect
+        overlap assumption — the optimistic bound)."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    def summary(self) -> str:
+        return (
+            f"{self.arch:28s} {self.shape:12s} {self.mesh:10s} "
+            f"compute={self.t_compute * 1e3:9.3f}ms memory={self.t_memory * 1e3:9.3f}ms "
+            f"collective={self.t_collective * 1e3:9.3f}ms -> {self.bottleneck:10s} "
+            f"useful={self.useful_ratio:6.1%}"
+        )
+
+
+def _mem_field(mem, name: str) -> int:
+    try:
+        v = getattr(mem, name)()
+    except TypeError:
+        v = getattr(mem, name)
+    except AttributeError:
+        return 0
+    return int(v)
+
+
+def model_flops_estimate(cfg, shape) -> float:
+    """6·N_active·tokens for train, 2·N_active·tokens for inference."""
+    n = cfg.active_param_count()
+    if shape.mode == "train":
+        return 6.0 * n * shape.global_batch * shape.seq_len
+    if shape.mode == "prefill":
+        return 2.0 * n * shape.global_batch * shape.seq_len
+    return 2.0 * n * shape.global_batch  # decode: one token per sequence
+
+
+def analyze_compiled(
+    compiled,
+    *,
+    arch: str,
+    shape,
+    cfg,
+    mesh_name: str,
+    chips: int,
+    chip: Chip = TPU_V5E,
+    microbatches: int = 1,
+    variant: str = "",
+) -> RooflineResult:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):  # older jax returns [dict]
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    hbm = float(cost.get("bytes accessed", 0.0))
+
+    text = compiled.as_text()
+    by_kind = collective_bytes(text)
+    link_bytes = collective_link_bytes(by_kind)
+
+    mem = compiled.memory_analysis()
+    arg_b = _mem_field(mem, "argument_size_in_bytes")
+    out_b = _mem_field(mem, "output_size_in_bytes")
+    tmp_b = _mem_field(mem, "temp_size_in_bytes")
+    peak = arg_b + tmp_b + out_b
+
+    t_c = flops / chip.peak_flops_bf16
+    t_m = hbm / chip.hbm_bw
+    t_x = link_bytes / chip.ici_link_bw
+    bottleneck = max(
+        (("compute", t_c), ("memory", t_m), ("collective", t_x)), key=lambda kv: kv[1]
+    )[0]
+
+    mf = model_flops_estimate(cfg, shape)
+    useful = mf / (flops * chips) if flops else 0.0
+
+    return RooflineResult(
+        arch=arch,
+        shape=shape.name,
+        mesh=mesh_name,
+        chips=chips,
+        flops_per_chip=flops,
+        hbm_bytes_per_chip=hbm,
+        coll_bytes_by_kind=by_kind,
+        link_bytes_per_chip=link_bytes,
+        arg_bytes=arg_b,
+        output_bytes=out_b,
+        temp_bytes=tmp_b,
+        peak_bytes=peak,
+        t_compute=t_c,
+        t_memory=t_m,
+        t_collective=t_x,
+        bottleneck=bottleneck,
+        model_flops=mf,
+        useful_ratio=useful,
+        microbatches=microbatches,
+        variant=variant,
+    )

@@ -1,0 +1,77 @@
+"""Render the dry-run JSON results into the EXPERIMENTS.md tables."""
+from __future__ import annotations
+
+import json
+import pathlib
+
+
+def _fmt_bytes(b: float) -> str:
+    for unit in ("B", "KB", "MB", "GB", "TB"):
+        if abs(b) < 1024 or unit == "TB":
+            return f"{b:.2f}{unit}"
+        b /= 1024
+    return f"{b:.2f}TB"
+
+
+def _fmt_ms(s: float) -> str:
+    return f"{s * 1e3:.3f}"
+
+
+def load_results(json_dir: str) -> list[dict]:
+    out = []
+    for p in sorted(pathlib.Path(json_dir).glob("*.json")):
+        out.append(json.loads(p.read_text()))
+    return out
+
+
+SHAPE_ORDER = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3}
+
+
+def roofline_table(results: list[dict]) -> str:
+    rows = sorted(results, key=lambda r: (r["arch"], SHAPE_ORDER.get(r["shape"], 9)))
+    lines = [
+        "| arch | shape | mb | compute (ms) | memory (ms) | collective (ms) | bottleneck | "
+        "MODEL_FLOPS | useful | HBM/chip peak |",
+        "|---|---|---:|---:|---:|---:|---|---:|---:|---:|",
+    ]
+    for r in rows:
+        lines.append(
+            f"| {r['arch']}{r.get('variant', '')} | {r['shape']} | {r['microbatches']} "
+            f"| {_fmt_ms(r['t_compute'])} | {_fmt_ms(r['t_memory'])} | {_fmt_ms(r['t_collective'])} "
+            f"| **{r['bottleneck']}** | {r['model_flops']:.2e} | {r['useful_ratio']:.1%} "
+            f"| {_fmt_bytes(r['peak_bytes'])} |"
+        )
+    return "\n".join(lines)
+
+
+def dryrun_table(results: list[dict]) -> str:
+    rows = sorted(results, key=lambda r: (r["arch"], SHAPE_ORDER.get(r["shape"], 9)))
+    lines = [
+        "| arch | shape | mesh | args/chip | temp/chip | flops/chip | link bytes/chip | collectives |",
+        "|---|---|---|---:|---:|---:|---:|---|",
+    ]
+    for r in rows:
+        kinds = ", ".join(
+            f"{k}:{_fmt_bytes(v)}" for k, v in sorted(r["coll_bytes_by_kind"].items())
+        )
+        lines.append(
+            f"| {r['arch']}{r.get('variant', '')} | {r['shape']} | {r['mesh']} "
+            f"| {_fmt_bytes(r['arg_bytes'])} | {_fmt_bytes(r['temp_bytes'])} "
+            f"| {r['flops_per_chip']:.2e} | {_fmt_bytes(r['link_bytes_per_chip'])} | {kinds} |"
+        )
+    return "\n".join(lines)
+
+
+def main():
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json-dir", default="experiments/dryrun")
+    ap.add_argument("--kind", choices=["roofline", "dryrun"], default="roofline")
+    args = ap.parse_args()
+    results = load_results(args.json_dir)
+    print(roofline_table(results) if args.kind == "roofline" else dryrun_table(results))
+
+
+if __name__ == "__main__":
+    main()

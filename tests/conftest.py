@@ -1,0 +1,14 @@
+"""Shared pytest config.
+
+x64 is enabled so the ELBO identity tests (tight bound == naive bound at the
+optimal variational posterior) can be checked to near machine precision.
+All library code takes explicit dtypes, so enabling x64 here does not change
+what the library computes for f32/bf16 callers.
+
+NOTE: XLA_FLAGS / device-count forcing is deliberately NOT set here — smoke
+tests and benchmarks must see the real single CPU device.  Distributed tests
+that need multiple devices spawn subprocesses (see test_distributed.py).
+"""
+import jax
+
+jax.config.update("jax_enable_x64", True)

@@ -1,0 +1,67 @@
+"""Baseline models: sanity + the paper's comparative claims on synthetic data."""
+import numpy as np
+
+from repro.core import baselines
+from repro.data.synthetic import make_dense_nonlinear_tensor, make_ground_truth
+from repro.data.tensor_store import EntrySet, random_entries
+from repro.utils.metrics import auc, mse
+
+
+def _continuous(seed=0, dims=(20, 15, 12), n=700):
+    rng = np.random.default_rng(seed)
+    truth = make_ground_truth(rng, dims, rank=2, num_centers=10)
+    idx = random_entries(rng, dims, n)
+    y = (truth.latent(idx) + rng.normal(size=n) * 0.05).astype(np.float32)
+    return EntrySet(idx[:500], y[:500]), EntrySet(idx[500:], y[500:]), dims
+
+
+def test_cp_learns_multilinear_data():
+    """On PURELY multilinear ground truth CP should do well."""
+    rng = np.random.default_rng(0)
+    dims = (20, 15, 12)
+    truth = make_ground_truth(rng, dims, rank=2, cp_weight=1.0, num_centers=0 or 1)
+    # kill the nonlinear part
+    truth = type(truth)(
+        factors=truth.factors, centers=truth.centers, weights=truth.weights * 0,
+        bandwidth=truth.bandwidth, cp_weight=1.0, noise_std=0.02,
+    )
+    idx = random_entries(rng, dims, 700)
+    y = (truth.latent(idx) + rng.normal(size=700) * 0.02).astype(np.float32)
+    train, test = EntrySet(idx[:500], y[:500]), EntrySet(idx[500:], y[500:])
+    cp = baselines.fit_cp(train, dims, rank=3, steps=800)
+    err = mse(test.y, np.asarray(cp.score(test.idx)))
+    assert err < 0.3 * float(np.var(test.y)), err
+
+
+def test_tucker_scores_finite_and_learns():
+    train, test, dims = _continuous()
+    tk = baselines.fit_tucker(train, dims, rank=3, steps=600)
+    pred = np.asarray(tk.score(test.idx))
+    assert np.isfinite(pred).all()
+    assert mse(test.y, pred) < float(np.var(test.y))
+
+
+def test_inftucker_fits_small_dense_tensor():
+    rng = np.random.default_rng(0)
+    dense, truth = make_dense_nonlinear_tensor(rng, (8, 7, 6), rank=2, noise_std=0.05)
+    model = baselines.fit_inftucker(dense, rank=2, steps=100)
+    grid = np.stack(np.meshgrid(*[np.arange(d) for d in (8, 7, 6)], indexing="ij"), -1)
+    idx = grid.reshape(-1, 3)
+    pred = baselines.inftucker_predict(model, (8, 7, 6), idx[:50])
+    err = mse(dense.reshape(-1)[:50], pred)
+    assert err < 0.5 * float(np.var(dense)), err
+
+
+def test_linear_baselines_auc_above_chance():
+    rng = np.random.default_rng(0)
+    dims = (50, 40, 10)
+    truth = make_ground_truth(rng, dims, rank=2)
+    idx = random_entries(rng, dims, 1500)
+    f = truth.latent(idx)
+    f = (f - f.mean()) / (f.std() + 1e-9)
+    y = (rng.normal(size=len(f)) * 0.5 < f).astype(np.float32)
+    train, test = EntrySet(idx[:1000], y[:1000]), EntrySet(idx[1000:], y[1000:])
+    for kind in ("logistic", "hinge"):
+        lin = baselines.fit_linear(train, dims, loss_kind=kind, steps=300)
+        score = auc(test.y, np.asarray(lin.score(test.idx)))
+        assert score > 0.6, (kind, score)

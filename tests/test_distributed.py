@@ -1,0 +1,99 @@
+"""Sharded (key-value-free psum) inference == single-device inference.
+
+Runs in a SUBPROCESS with XLA_FLAGS=--xla_force_host_platform_device_count=8
+so the rest of the test session keeps seeing one device.
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import elbo as elbo_mod
+from repro.core import inference
+from repro.data.synthetic import make_ground_truth
+from repro.data.tensor_store import random_entries
+
+assert len(jax.devices()) == 8, jax.devices()
+
+dims = (15, 12, 10)
+rng = np.random.default_rng(0)
+truth = make_ground_truth(rng, dims, rank=2)
+idx_np = random_entries(rng, dims, 256)
+f = truth.latent(idx_np)
+y_np = (f + rng.normal(size=len(f)) * 0.05).astype(np.float32)
+w_np = np.ones(256, np.float32)
+
+mesh = jax.make_mesh((4, 2), ("data", "model"))
+
+for task in ("continuous", "binary"):
+    if task == "binary":
+        y_use = (y_np > np.median(y_np)).astype(np.float32)
+    else:
+        y_use = y_np
+    params = elbo_mod.init_params(
+        jax.random.PRNGKey(0), dims, 2, num_inducing=12, factor_scale=0.4
+    )
+    if task == "binary":
+        import dataclasses
+        params = dataclasses.replace(
+            params, lam=0.1 * jax.random.normal(jax.random.PRNGKey(1), (12,))
+        )
+    cfg = inference.InferenceConfig(task=task, data_axes=("data", "model"))
+    cfg1 = inference.InferenceConfig(task=task)
+
+    single = inference.make_loss_and_grad(cfg1, mesh=None)
+    multi = inference.make_loss_and_grad(cfg, mesh=mesh)
+
+    idx, y, w = jnp.asarray(idx_np), jnp.asarray(y_use), jnp.asarray(w_np)
+    l1, g1 = single(params, idx, y, w)
+    si, sy, sw = inference.shard_batch(mesh, cfg, idx, y, w)
+    l2, g2 = multi(params, si, sy, sw)
+
+    np.testing.assert_allclose(float(l1), float(l2), rtol=2e-5)
+    for a, b in zip(jax.tree.leaves(g1), jax.tree.leaves(g2)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-4, atol=2e-5)
+
+    if task == "binary":
+        up1 = inference.make_lambda_update(cfg1, mesh=None)
+        up8 = inference.make_lambda_update(cfg, mesh=mesh)
+        p1 = up1(params, idx, y, w)
+        p8 = up8(params, si, sy, sw)
+        np.testing.assert_allclose(
+            np.asarray(p1.lam), np.asarray(p8.lam), rtol=2e-4, atol=2e-5
+        )
+
+# HLO must contain all-reduce (the key-value-free reduce), and no all-to-all
+# (no shuffle!)
+cfg = inference.InferenceConfig(task="continuous", data_axes=("data", "model"))
+params = elbo_mod.init_params(jax.random.PRNGKey(0), dims, 2, num_inducing=12)
+fn = inference.make_elbo_fn(cfg, mesh=mesh)
+si, sy, sw = inference.shard_batch(
+    mesh, cfg, jnp.asarray(idx_np), jnp.asarray(y_np), jnp.asarray(w_np)
+)
+txt = jax.jit(fn).lower(params, si, sy, sw).compile().as_text()
+assert "all-reduce" in txt, "expected psum all-reduce in compiled HLO"
+assert "all-to-all" not in txt, "data shuffling collective found; should be key-value-free"
+
+print("DISTRIBUTED-OK")
+"""
+
+
+def test_sharded_matches_single_device():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src")
+    )
+    out = subprocess.run(
+        [sys.executable, "-c", _SCRIPT], capture_output=True, text=True, env=env,
+        timeout=600,
+    )
+    assert out.returncode == 0, f"stdout:\n{out.stdout}\nstderr:\n{out.stderr}"
+    assert "DISTRIBUTED-OK" in out.stdout

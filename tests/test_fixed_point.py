@@ -1,0 +1,80 @@
+"""Lemma 4.3: the lambda fixed-point iteration monotonically improves L2*
+and converges."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import elbo as elbo_mod
+from repro.core import fixed_point
+from repro.core.stats import binary_stats
+
+DIMS = (8, 6, 5)
+RANK = 2
+P = 9
+N = 60
+KIND = "rbf"
+
+
+def _setup(seed=0):
+    key = jax.random.PRNGKey(seed)
+    params = elbo_mod.init_params(
+        key, DIMS, RANK, num_inducing=P, kernel_kind=KIND,
+        factor_scale=0.6, dtype=jnp.float64,
+    )
+    kidx, ky = jax.random.split(jax.random.fold_in(key, 1))
+    idx = jnp.stack(
+        [jax.random.randint(jax.random.fold_in(kidx, k), (N,), 0, DIMS[k]) for k in range(3)],
+        axis=1,
+    )
+    y = jax.random.bernoulli(ky, 0.4, (N,)).astype(jnp.float64)
+    return params, idx, y
+
+
+def _l2star(params, idx, y):
+    stats, s_phi, _ = binary_stats(
+        KIND, params.kernel, params.factors, params.inducing, idx, y, params.lam
+    )
+    return float(elbo_mod.elbo_binary(KIND, params, stats, s_phi))
+
+
+def test_fixed_point_monotone_and_convergent():
+    params, idx, y = _setup()
+    vals = [_l2star(params, idx, y)]
+    lam_prev = params.lam
+    deltas = []
+    for _ in range(25):
+        stats, _, a5 = binary_stats(
+            KIND, params.kernel, params.factors, params.inducing, idx, y, params.lam
+        )
+        new_lam = fixed_point.lam_step(KIND, params, stats.a1, a5)
+        deltas.append(float(jnp.max(jnp.abs(new_lam - lam_prev))))
+        lam_prev = new_lam
+        params = dataclasses.replace(params, lam=new_lam)
+        vals.append(_l2star(params, idx, y))
+    vals = np.array(vals)
+    # monotone non-decreasing (tiny float tolerance)
+    assert (np.diff(vals) >= -1e-7).all(), np.diff(vals).min()
+    # strictly improved overall and converged
+    assert vals[-1] > vals[0]
+    assert deltas[-1] < 1e-6, deltas[-5:]
+
+
+def test_run_fixed_point_driver_matches_manual():
+    params, idx, y = _setup(seed=3)
+
+    def stats_fn(p):
+        stats, _, a5 = binary_stats(
+            KIND, p.kernel, p.factors, p.inducing, idx, y, p.lam
+        )
+        return stats.a1, a5
+
+    out, iters = fixed_point.run_fixed_point(KIND, params, stats_fn, max_iters=50, tol=1e-9)
+    assert int(iters) > 1
+    # lambda satisfies the fixed-point equation
+    a1, a5 = stats_fn(out)
+    resid = fixed_point.lam_step(KIND, out, a1, a5) - out.lam
+    assert float(jnp.max(jnp.abs(resid))) < 1e-6
+    # and improves the bound versus lam = 0
+    assert _l2star(out, idx, y) > _l2star(params, idx, y)

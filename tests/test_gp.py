@@ -1,0 +1,116 @@
+"""Unit + property tests for the covariance functions and input gathering."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import gp
+
+KINDS = list(gp.KERNEL_KINDS)
+
+
+def _random_inputs(seed, n, m, d, dtype=jnp.float64):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    return (
+        jax.random.normal(k1, (n, d), dtype),
+        jax.random.normal(k2, (m, d), dtype),
+    )
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_symmetry_and_diag(kind):
+    xs, _ = _random_inputs(0, 9, 5, 4)
+    kp = gp.init_kernel_params(kind, 4, lengthscale=0.7, amplitude=1.3, dtype=jnp.float64)
+    kxx = gp.kernel_matrix(kind, kp, xs, xs)
+    np.testing.assert_allclose(kxx, kxx.T, rtol=1e-12)
+    np.testing.assert_allclose(jnp.diag(kxx), gp.kernel_diag(kind, kp, xs), rtol=1e-10)
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_psd(kind):
+    xs, _ = _random_inputs(1, 12, 5, 3)
+    kp = gp.init_kernel_params(kind, 3, dtype=jnp.float64)
+    kxx = gp.kernel_matrix(kind, kp, xs, xs)
+    eigs = np.linalg.eigvalsh(np.asarray(kxx))
+    assert eigs.min() > -1e-8
+
+
+@pytest.mark.parametrize("kind", ["rbf", "matern32", "matern52"])
+def test_stationary_bounds(kind):
+    """0 < k(x, z) <= amp^2, equality iff x == z."""
+    xs, zs = _random_inputs(2, 8, 6, 5)
+    kp = gp.init_kernel_params(kind, 5, amplitude=2.0, dtype=jnp.float64)
+    kxz = gp.kernel_matrix(kind, kp, xs, zs)
+    assert (kxz > 0).all()
+    assert (kxz <= 4.0 + 1e-9).all()
+    np.testing.assert_allclose(
+        gp.kernel_matrix(kind, kp, xs[:1], xs[:1])[0, 0], 4.0, rtol=1e-9
+    )
+
+
+def test_ard_matches_iso_when_shared_lengthscale():
+    xs, zs = _random_inputs(3, 7, 4, 6)
+    kp_iso = gp.init_kernel_params("rbf", 6, lengthscale=0.5, dtype=jnp.float64)
+    kp_ard = gp.init_kernel_params("ard", 6, lengthscale=0.5, dtype=jnp.float64)
+    np.testing.assert_allclose(
+        gp.kernel_matrix("rbf", kp_iso, xs, zs),
+        gp.kernel_matrix("ard", kp_ard, xs, zs),
+        rtol=1e-10,
+    )
+
+
+def test_linear_kernel_is_scaled_inner_product():
+    xs, zs = _random_inputs(4, 5, 6, 3)
+    kp = gp.init_kernel_params("linear", 3, lengthscale=2.0, amplitude=1.5, dtype=jnp.float64)
+    expected = (1.5**2) * (xs / 2.0) @ (zs / 2.0).T
+    np.testing.assert_allclose(gp.kernel_matrix("linear", kp, xs, zs), expected, rtol=1e-10)
+
+
+def test_gather_inputs_concatenates_rows():
+    key = jax.random.PRNGKey(0)
+    dims, ranks = (5, 4, 6), (2, 3, 1)
+    factors = tuple(
+        jax.random.normal(jax.random.fold_in(key, k), (dims[k], ranks[k]), jnp.float64)
+        for k in range(3)
+    )
+    idx = jnp.array([[0, 1, 2], [4, 3, 5]])
+    xs = gp.gather_inputs(factors, idx)
+    assert xs.shape == (2, 6)
+    np.testing.assert_allclose(xs[0, :2], factors[0][0])
+    np.testing.assert_allclose(xs[0, 2:5], factors[1][1])
+    np.testing.assert_allclose(xs[1, 5:], factors[2][5])
+
+
+@hypothesis.settings(deadline=None, max_examples=25)
+@hypothesis.given(
+    n=st.integers(1, 12),
+    m=st.integers(1, 12),
+    d=st.integers(1, 8),
+    seed=st.integers(0, 2**16),
+    ls=st.floats(0.1, 5.0),
+    kind=st.sampled_from(KINDS),
+)
+def test_property_cross_cov_consistent_with_distance(n, m, d, seed, ls, kind):
+    """Property: kernel matches elementwise scalar evaluation (vmap-free oracle)."""
+    xs, zs = _random_inputs(seed, n, m, d)
+    kp = gp.init_kernel_params(kind, d, lengthscale=ls, dtype=jnp.float64)
+    kmat = np.asarray(gp.kernel_matrix(kind, kp, xs, zs))
+    # scalar oracle
+    xs_n, zs_n = np.asarray(xs) / ls, np.asarray(zs) / ls
+    for i in range(0, n, max(1, n // 3)):
+        for j in range(0, m, max(1, m // 3)):
+            if kind == "linear":
+                want = xs_n[i] @ zs_n[j]
+            else:
+                r2 = np.sum((xs_n[i] - zs_n[j]) ** 2)
+                if kind in ("rbf", "ard"):
+                    want = np.exp(-0.5 * r2)
+                elif kind == "matern32":
+                    s = np.sqrt(3 * r2 + 3e-12)
+                    want = (1 + s) * np.exp(-s)
+                else:
+                    s = np.sqrt(5 * r2 + 5e-12)
+                    want = (1 + s + s * s / 3) * np.exp(-s)
+            np.testing.assert_allclose(kmat[i, j], want, rtol=1e-6, atol=1e-9)

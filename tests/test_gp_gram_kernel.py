@@ -1,0 +1,130 @@
+"""Pallas gp_gram kernel vs the jnp oracle: shape/dtype/kind sweeps
+(interpret mode on CPU) + gradient equivalence via the custom VJP."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import gp
+from repro.kernels.gp_gram import ops, ref
+
+
+def _inputs(seed, n, p, d, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    xs = jax.random.normal(ks[0], (n, d), dtype)
+    bs = jax.random.normal(ks[1], (p, d), dtype)
+    y = jax.random.normal(ks[2], (n,), dtype)
+    w = jax.random.uniform(ks[3], (n,), dtype)
+    return xs, bs, y, w
+
+
+def _assert_stats_close(got, want, rtol, atol=1e-3):
+    for name in ("a1", "a2", "a3", "a4", "n"):
+        np.testing.assert_allclose(
+            np.asarray(getattr(got, name), np.float32),
+            np.asarray(getattr(want, name), np.float32),
+            rtol=rtol, atol=atol, err_msg=name,
+        )
+
+
+@pytest.mark.parametrize("kind", ["rbf", "ard", "matern32", "matern52", "linear"])
+@pytest.mark.parametrize(
+    "n,p,d", [(64, 16, 6), (100, 100, 9), (512, 100, 12), (1000, 50, 30)]
+)
+def test_kernel_matches_ref_f32(kind, n, p, d):
+    xs, bs, y, w = _inputs(0, n, p, d, jnp.float32)
+    kp = gp.init_kernel_params(kind, d, lengthscale=0.8, amplitude=1.2, dtype=jnp.float32)
+    got = ops.gram_stats(kind, kp, xs, bs, y, w, tile_n=128)
+    want = ref.gram_stats_ref(kind, kp, xs, bs, y, w)
+    _assert_stats_close(got, want, rtol=5e-4)
+
+
+@pytest.mark.parametrize("kind", ["ard", "matern52"])
+def test_kernel_matches_ref_bf16_inputs(kind):
+    xs, bs, y, w = _inputs(1, 256, 40, 8, jnp.float32)
+    kp = gp.init_kernel_params(kind, 8, dtype=jnp.float32)
+    got = ops.gram_stats(
+        kind, kp, xs.astype(jnp.bfloat16), bs.astype(jnp.bfloat16),
+        y.astype(jnp.bfloat16), w.astype(jnp.bfloat16), tile_n=128,
+    )
+    want = ref.gram_stats_ref(kind, kp, xs, bs, y, w)
+    # bf16 feature stream: coarse tolerance, f32 accumulation keeps it sane
+    _assert_stats_close(got, want, rtol=6e-2, atol=0.3)
+
+
+def test_kernel_with_whitening_matches_ref():
+    xs, bs, y, w = _inputs(2, 300, 32, 7, jnp.float32)
+    kp = gp.init_kernel_params("ard", 7, dtype=jnp.float32)
+    kbb = gp.kernel_matrix("ard", kp, bs, bs) + 1e-3 * jnp.eye(32)
+    linv = jnp.linalg.inv(jnp.linalg.cholesky(kbb))
+    got = ops.gram_stats("ard", kp, xs, bs, y, w, linv, tile_n=128)
+    want = ref.gram_stats_ref("ard", kp, xs, bs, y, w, linv)
+    _assert_stats_close(got, want, rtol=5e-4, atol=1e-4)
+
+
+def test_zero_weight_padding_rows_noop():
+    xs, bs, y, w = _inputs(3, 96, 24, 5, jnp.float32)
+    kp = gp.init_kernel_params("rbf", 5, dtype=jnp.float32)
+    got = ops.gram_stats("rbf", kp, xs, bs, y, w, tile_n=64)  # pads 96 -> 128
+    want = ref.gram_stats_ref("rbf", kp, xs, bs, y, w)
+    _assert_stats_close(got, want, rtol=5e-4)
+
+
+def test_gradients_match_reference():
+    xs, bs, y, w = _inputs(4, 128, 20, 6, jnp.float32)
+    kp = gp.init_kernel_params("ard", 6, dtype=jnp.float32)
+
+    def loss_pallas(kp, xs, bs):
+        s = ops.gram_stats("ard", kp, xs, bs, y, w, tile_n=64)
+        return jnp.sum(s.a1) + jnp.sum(s.a4) + s.a3
+
+    def loss_ref(kp, xs, bs):
+        s = ref.gram_stats_ref("ard", kp, xs, bs, y, w)
+        return jnp.sum(s.a1) + jnp.sum(s.a4) + s.a3
+
+    g1 = jax.grad(loss_pallas, argnums=(0, 1, 2))(kp, xs, bs)
+    g2 = jax.grad(loss_ref, argnums=(0, 1, 2))(kp, xs, bs)
+    for a, b in zip(jax.tree.leaves(g1), jax.tree.leaves(g2)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-5)
+
+
+def test_stats_backend_pallas_end_to_end():
+    """core.stats with backend='pallas' (chunked scan) == backend='jnp'."""
+    from repro.core import stats as stats_mod
+
+    key = jax.random.PRNGKey(0)
+    dims, rank, p, n = (12, 10, 8), 2, 16, 256
+    factors = tuple(
+        0.3 * jax.random.normal(jax.random.fold_in(key, k), (dims[k], rank), jnp.float32)
+        for k in range(3)
+    )
+    inducing = 0.3 * jax.random.normal(jax.random.fold_in(key, 9), (p, 6), jnp.float32)
+    kp = gp.init_kernel_params("ard", 6, dtype=jnp.float32)
+    idx = jnp.stack(
+        [jax.random.randint(jax.random.fold_in(key, 20 + k), (n,), 0, dims[k]) for k in range(3)],
+        axis=1,
+    )
+    y = jax.random.normal(jax.random.fold_in(key, 30), (n,), jnp.float32)
+    a = stats_mod.sufficient_stats("ard", kp, factors, inducing, idx, y, backend="jnp")
+    b = stats_mod.sufficient_stats(
+        "ard", kp, factors, inducing, idx, y, backend="pallas", chunk=128
+    )
+    _assert_stats_close(b, a, rtol=3e-4)
+
+
+@hypothesis.settings(deadline=None, max_examples=10)
+@hypothesis.given(
+    n=st.integers(8, 300),
+    p=st.integers(1, 64),
+    d=st.integers(1, 16),
+    tile=st.sampled_from([32, 64, 128]),
+    seed=st.integers(0, 1000),
+)
+def test_property_arbitrary_shapes_match(n, p, d, tile, seed):
+    xs, bs, y, w = _inputs(seed, n, p, d, jnp.float32)
+    kp = gp.init_kernel_params("rbf", d, dtype=jnp.float32)
+    got = ops.gram_stats("rbf", kp, xs, bs, y, w, tile_n=tile)
+    want = ref.gram_stats_ref("rbf", kp, xs, bs, y, w)
+    _assert_stats_close(got, want, rtol=5e-4, atol=1e-4)

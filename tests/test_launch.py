@@ -1,0 +1,103 @@
+"""Launch-layer unit tests (no compilation, no device allocation):
+input specs, long-context variant resolution, microbatch policy, and the
+analytic-vs-ShapeDtypeStruct consistency of the decode caches."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import SHAPES, get_arch, list_archs
+from repro.launch.steps import (
+    abstract_params,
+    decode_cache_specs,
+    input_specs,
+    resolve_arch_for_shape,
+    train_batch_specs,
+)
+
+jax.config.update("jax_enable_x64", True)
+
+
+@pytest.mark.parametrize("arch", list_archs())
+@pytest.mark.parametrize("shape_name", list(SHAPES))
+def test_input_specs_cover_all_pairs(arch, shape_name):
+    cfg = get_arch(arch)
+    shape = SHAPES[shape_name]
+    specs = input_specs(cfg, shape)
+    leaves = jax.tree.leaves(specs)
+    assert leaves, (arch, shape_name)
+    # ShapeDtypeStructs only — never allocated arrays
+    assert all(isinstance(l, jax.ShapeDtypeStruct) for l in leaves)
+    if shape.mode == "train":
+        toks = specs["batch"]["tokens"]
+        assert toks.shape[0] == shape.global_batch
+        if cfg.modality == "vision":
+            assert toks.shape[1] == shape.seq_len - cfg.frontend_tokens
+            assert specs["batch"]["patch_embeds"].shape[1] == cfg.frontend_tokens
+        else:
+            assert toks.shape[1] == shape.seq_len
+    elif shape.mode == "decode":
+        assert specs["tokens"].shape == (shape.global_batch, 1)
+        assert specs["pos"].shape == ()
+
+
+def test_long_context_variant_resolution():
+    long = SHAPES["long_500k"]
+    for arch in list_archs():
+        cfg0 = get_arch(arch)
+        cfg, variant = resolve_arch_for_shape(cfg0, long)
+        assert cfg.supports_seq_len(long.seq_len)
+        if cfg0.family in ("ssm", "hybrid") or cfg0.sliding_window:
+            assert variant == ""  # native sub-quadratic
+        else:
+            assert variant == "+swa" and cfg.sliding_window > 0
+        # short shapes never mutate the config
+        cfg_t, v_t = resolve_arch_for_shape(cfg0, SHAPES["train_4k"])
+        assert cfg_t == cfg0 and v_t == ""
+
+
+def test_decode_cache_specs_window_capped():
+    long = SHAPES["long_500k"]
+    # SWA variant: kv cache is the 4096 ring, not 524288
+    cfg, _ = resolve_arch_for_shape(get_arch("qwen2-72b"), long)
+    cache = decode_cache_specs(cfg, long)
+    assert cache["kv"]["k"].shape[2] == 4096
+    # full attention at 32k: linear cache of the whole context
+    cfg32, _ = resolve_arch_for_shape(get_arch("qwen2-72b"), SHAPES["decode_32k"])
+    cache32 = decode_cache_specs(cfg32, SHAPES["decode_32k"])
+    assert cache32["kv"]["k"].shape[2] == 32768
+    # SSM: O(1) state, no kv
+    cfgm, _ = resolve_arch_for_shape(get_arch("mamba2-1.3b"), long)
+    cm = decode_cache_specs(cfgm, long)
+    assert "kv" not in cm and cm["ssm"]["state"].shape[1] == 1
+
+
+def test_abstract_params_match_reduced_structure():
+    """Full-config abstract params and real reduced params have the same
+    tree structure (so shardings built on one apply to the other)."""
+    from repro.configs import get_reduced
+    from repro.models import init_lm_params
+
+    for arch in ("qwen3-0.6b", "mixtral-8x22b", "zamba2-1.2b", "llava-next-mistral-7b"):
+        full = abstract_params(get_arch(arch))
+        red = init_lm_params(jax.random.PRNGKey(0), get_reduced(arch))
+        assert jax.tree.structure(full) == jax.tree.structure(red)
+
+
+def test_default_microbatches_divisibility():
+    # importing dryrun only sets XLA_FLAGS (inert: jax devices are already
+    # locked to 1 in-process); the mesh is duck-typed — the policy only
+    # reads .axis_names and .shape.
+    from repro.launch.dryrun import default_microbatches  # noqa: PLC0415
+
+    class FakeMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 16, "model": 16}
+
+    mesh = FakeMesh()
+    for arch in list_archs():
+        cfg = get_arch(arch)
+        for shape in SHAPES.values():
+            m = default_microbatches(cfg, shape, mesh)
+            assert shape.global_batch % m == 0
+            if shape.mode != "train":
+                assert m == 1

@@ -1,0 +1,273 @@
+"""Model-zoo correctness: layer oracles + per-arch smoke tests.
+
+The important invariants:
+  * chunked (flash-schedule) attention == naive masked softmax attention,
+    for causal, sliding-window and GQA variants;
+  * the chunked SSD scan == the naive per-step recurrence, and the decode
+    step is consistent with it;
+  * prefill (lm_forward) and token-by-token decode (lm_decode_step) produce
+    the same logits;
+  * MoE capacity dispatch == gather dispatch when nothing is dropped.
+
+Plus: every one of the 10 assigned architectures instantiates its REDUCED
+variant and runs one train step + one decode step with finite outputs.
+"""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import SHAPES, get_arch, get_reduced, list_archs
+from repro.models import (
+    init_decode_cache,
+    init_lm_params,
+    lm_decode_step,
+    lm_forward,
+    lm_loss,
+)
+from repro.models.layers import chunked_attention, decode_attention
+from repro.models.moe import _local_moe, _local_moe_decode, init_moe_params
+from repro.models.ssm import ssd_chunked, ssd_decode_step
+
+jax.config.update("jax_enable_x64", True)
+
+
+# ------------------------------------------------------------- attention
+
+
+def naive_attention(q, k, v, causal=True, window=0):
+    B, S, H, hd = q.shape
+    Hk = k.shape[2]
+    g = H // Hk
+    qf = q.astype(jnp.float32).reshape(B, S, Hk, g, hd)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qf, k.astype(jnp.float32)) / math.sqrt(hd)
+    i, j = jnp.arange(S)[:, None], jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= i >= j
+    if window:
+        mask &= i - j < window
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bhgqd", p, v.astype(jnp.float32))
+    return o.transpose(0, 3, 1, 2, 4).reshape(B, S, H, hd)
+
+
+@pytest.mark.parametrize("S,H,Hk,window,qc", [
+    (128, 4, 4, 0, 32),
+    (128, 8, 2, 0, 64),
+    (256, 4, 1, 0, 64),
+    (128, 4, 2, 32, 32),
+    (256, 8, 4, 64, 64),
+])
+def test_chunked_attention_matches_naive(S, H, Hk, window, qc):
+    key = jax.random.PRNGKey(0)
+    B, hd = 2, 16
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (B, S, H, hd), jnp.float32)
+    k = jax.random.normal(kk, (B, S, Hk, hd), jnp.float32)
+    v = jax.random.normal(kv, (B, S, Hk, hd), jnp.float32)
+    got = chunked_attention(q, k, v, causal=True, window=window, q_chunk=qc, kv_chunk=qc)
+    want = naive_attention(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_decode_attention_matches_last_row():
+    key = jax.random.PRNGKey(1)
+    B, S, H, Hk, hd = 2, 64, 4, 2, 16
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (B, S, H, hd), jnp.float32)
+    k = jax.random.normal(kk, (B, S, Hk, hd), jnp.float32)
+    v = jax.random.normal(kv, (B, S, Hk, hd), jnp.float32)
+    full = naive_attention(q, k, v, causal=True)
+    got = decode_attention(q[:, -1:], k, v, jnp.ones((B, S), bool))
+    np.testing.assert_allclose(got[:, 0], full[:, -1], rtol=2e-5, atol=2e-5)
+
+
+# ------------------------------------------------------------------ SSD
+
+
+def naive_ssd(x, dt, A_log, Bm, Cm, D):
+    """Step-by-step recurrence h_t = exp(a_t) h_{t-1} + dt_t B_t x_t."""
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+    a = dt * (-jnp.exp(A_log))[None, None]
+    h = jnp.zeros((Bsz, H, P, N))
+    ys = []
+    for t in range(S):
+        h = h * jnp.exp(a[:, t])[..., None, None] + jnp.einsum(
+            "bhp,bn->bhpn", x[:, t] * dt[:, t, :, None], Bm[:, t]
+        )
+        ys.append(jnp.einsum("bhpn,bn->bhp", h, Cm[:, t]) + x[:, t] * D[None, :, None])
+    return jnp.stack(ys, axis=1), h
+
+
+@pytest.mark.parametrize("S,chunk", [(32, 8), (64, 16), (64, 64), (48, 16)])
+def test_ssd_chunked_matches_recurrence(S, chunk):
+    key = jax.random.PRNGKey(2)
+    Bsz, H, P, N = 2, 3, 8, 4
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (Bsz, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (Bsz, S, H)))
+    A_log = jax.random.normal(ks[2], (H,)) * 0.5
+    Bm = jax.random.normal(ks[3], (Bsz, S, N))
+    Cm = jax.random.normal(ks[4], (Bsz, S, N))
+    D = jnp.ones((H,))
+    got, hT = ssd_chunked(x, dt, A_log, Bm, Cm, D, chunk=chunk)
+    want, h_want = naive_ssd(x, dt, A_log, Bm, Cm, D)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(hT, h_want, rtol=1e-4, atol=1e-4)
+
+
+def test_ssd_decode_step_consistent_with_chunked():
+    key = jax.random.PRNGKey(3)
+    Bsz, S, H, P, N = 2, 16, 3, 8, 4
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (Bsz, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (Bsz, S, H)))
+    A_log = jax.random.normal(ks[2], (H,)) * 0.5
+    Bm = jax.random.normal(ks[3], (Bsz, S, N))
+    Cm = jax.random.normal(ks[4], (Bsz, S, N))
+    D = jnp.ones((H,))
+    want, _ = ssd_chunked(x, dt, A_log, Bm, Cm, D, chunk=8)
+    h = jnp.zeros((Bsz, H, P, N))
+    for t in range(S):
+        y, h = ssd_decode_step(h, x[:, t], dt[:, t], A_log, Bm[:, t], Cm[:, t], D)
+        np.testing.assert_allclose(y, want[:, t], rtol=1e-4, atol=1e-4)
+
+
+# ------------------------------------------------------------------ MoE
+
+
+def test_moe_capacity_matches_gather_when_no_drops():
+    cfg = get_reduced("mixtral-8x22b")
+    key = jax.random.PRNGKey(4)
+    params = init_moe_params(key, cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(5), (32, cfg.d_model), jnp.float32) * 0.1
+    # capacity factor large enough that nothing is dropped
+    y_cap, _ = _local_moe(params, x, cfg, capacity_factor=float(cfg.num_experts), model_axis=None)
+    y_gather, _ = _local_moe_decode(params, x, cfg, model_axis=None)
+    np.testing.assert_allclose(y_cap, y_gather, rtol=1e-4, atol=1e-5)
+
+
+def test_moe_shared_experts_present():
+    cfg = get_reduced("qwen2-moe-a2.7b")
+    assert cfg.num_shared_experts > 0
+    params = init_moe_params(jax.random.PRNGKey(6), cfg, jnp.float32)
+    assert "w_shared_gate" in params
+
+
+# ------------------------------------------------- per-arch smoke tests
+
+
+def _make_batch(cfg, B, S, key):
+    kt, kp = jax.random.split(key)
+    if cfg.modality == "vision":
+        St = S - cfg.frontend_tokens
+        return {
+            "tokens": jax.random.randint(kt, (B, St), 0, cfg.vocab_size),
+            "patch_embeds": jax.random.normal(kp, (B, cfg.frontend_tokens, 1024), jnp.float32) * 0.02,
+            "labels": jax.random.randint(kt, (B, S), 0, cfg.vocab_size),
+            "mask": jnp.concatenate(
+                [jnp.zeros((B, cfg.frontend_tokens)), jnp.ones((B, St))], axis=1
+            ),
+        }
+    return {
+        "tokens": jax.random.randint(kt, (B, S), 0, cfg.vocab_size),
+        "labels": jax.random.randint(kp, (B, S), 0, cfg.vocab_size),
+        "mask": jnp.ones((B, S)),
+    }
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_arch_smoke_train_step(arch):
+    cfg = get_reduced(arch)
+    assert cfg.num_layers <= 4 and cfg.d_model <= 512
+    if cfg.num_experts:
+        assert cfg.num_experts <= 4
+    key = jax.random.PRNGKey(0)
+    params = init_lm_params(key, cfg)
+    B, S = 2, 64
+    batch = _make_batch(cfg, B, S, jax.random.PRNGKey(1))
+
+    def loss_fn(p):
+        return lm_loss(p, batch, cfg)[0]
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    assert jnp.isfinite(loss)
+    # one SGD step changes the loss (params actually receive gradient)
+    new_params = jax.tree.map(lambda p, g: p - 0.1 * g.astype(p.dtype), params, grads)
+    loss2 = loss_fn(new_params)
+    assert jnp.isfinite(loss2) and loss2 != loss
+    leaves = jax.tree.leaves(grads)
+    assert all(bool(jnp.all(jnp.isfinite(l))) for l in leaves)
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_arch_smoke_decode_step(arch):
+    cfg = get_reduced(arch)
+    params = init_lm_params(jax.random.PRNGKey(0), cfg)
+    B = 2
+    cache = init_decode_cache(cfg, B, context_len=128)
+    tok = jnp.zeros((B, 1), jnp.int32)
+    logits, cache = jax.jit(lambda p, c, t, pos: lm_decode_step(p, c, t, pos, cfg))(
+        params, cache, tok, jnp.int32(0)
+    )
+    assert logits.shape == (B, 1, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+@pytest.mark.parametrize("arch", ["qwen3-0.6b", "mamba2-1.3b", "zamba2-1.2b", "mixtral-8x22b"])
+def test_prefill_decode_consistency(arch):
+    """Token-by-token decode reproduces the prefill logits (f32: the check is
+    algorithmic exactness; bf16 accumulation drift is tested separately by
+    the smoke tests' finiteness)."""
+    import dataclasses
+
+    cfg = dataclasses.replace(get_reduced(arch), dtype="float32")
+    params = init_lm_params(jax.random.PRNGKey(0), cfg)
+    B, S = 2, 16
+    tokens = jax.random.randint(jax.random.PRNGKey(7), (B, S), 0, cfg.vocab_size)
+    full_logits, _ = lm_forward(params, {"tokens": tokens}, cfg)
+
+    cache = init_decode_cache(cfg, B, context_len=S)
+    step = jax.jit(lambda p, c, t, pos: lm_decode_step(p, c, t, pos, cfg))
+    for t in range(S):
+        logits, cache = step(params, cache, tokens[:, t : t + 1], jnp.int32(t))
+        np.testing.assert_allclose(
+            np.asarray(logits[:, 0]), np.asarray(full_logits[:, t]), rtol=1e-4, atol=1e-4
+        )
+
+
+def test_sliding_window_ring_cache_consistency():
+    """Ring-buffer SWA cache == full-history attention restricted to window."""
+    import dataclasses
+
+    cfg = get_reduced("qwen3-0.6b")
+    cfg = dataclasses.replace(cfg, sliding_window=8, dtype="float32")
+    params = init_lm_params(jax.random.PRNGKey(0), cfg)
+    B, S = 2, 24
+    tokens = jax.random.randint(jax.random.PRNGKey(8), (B, S), 0, cfg.vocab_size)
+    full_logits, _ = lm_forward(params, {"tokens": tokens}, cfg)
+
+    cache = init_decode_cache(cfg, B, context_len=S)  # ring of length 8
+    assert cache["kv"]["k"].shape[2] == 8
+    step = jax.jit(lambda p, c, t, pos: lm_decode_step(p, c, t, pos, cfg))
+    for t in range(S):
+        logits, cache = step(params, cache, tokens[:, t : t + 1], jnp.int32(t))
+        np.testing.assert_allclose(
+            np.asarray(logits[:, 0]), np.asarray(full_logits[:, t]), rtol=1e-4, atol=1e-4
+        )
+
+
+def test_long_context_support_flags():
+    for arch in list_archs():
+        cfg = get_arch(arch)
+        long = SHAPES["long_500k"]
+        if cfg.family in ("ssm", "hybrid") or cfg.sliding_window:
+            assert cfg.supports_seq_len(long.seq_len)
+        else:
+            assert not cfg.supports_seq_len(long.seq_len)
+            assert cfg.with_long_context_window().supports_seq_len(long.seq_len)

@@ -1,0 +1,118 @@
+"""Roofline machinery: analytic op model vs fully-unrolled HLO, and the
+collective-bytes HLO parser.
+
+The analytic model must track compiled-HLO flops within a few percent when
+every loop is unrolled (scan_unroll) — that is the calibration that lets the
+dry-run report analytic flops at depths/sequence-lengths where full unrolling
+is compile-time-prohibitive (see EXPERIMENTS.md §Dry-run methodology).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ShapeConfig, get_reduced
+from repro.launch.steps import make_prefill_step, make_serve_step, make_train_step
+from repro.models import init_decode_cache, init_lm_params
+from repro.optim import adam
+from repro.roofline.analytic import analytic_costs
+from repro.roofline.hlo import collective_bytes, collective_link_bytes
+
+jax.config.update("jax_enable_x64", True)
+
+# one representative per family (dense, moe+shared, ssm, hybrid)
+VALIDATION_ARCHS = ["qwen3-0.6b", "qwen2-moe-a2.7b", "mamba2-1.3b", "zamba2-1.2b"]
+
+
+def _compiled_flops(cfg, mode, B=2, S=256):
+    params = init_lm_params(jax.random.PRNGKey(0), cfg)
+    if mode == "train":
+        _, step = make_train_step(cfg, None, microbatches=1)
+        opt = adam(1e-4).init(params)
+        batch = {
+            "tokens": jnp.zeros((B, S), jnp.int32),
+            "labels": jnp.zeros((B, S), jnp.int32),
+            "mask": jnp.ones((B, S)),
+        }
+        c = jax.jit(step).lower(params, opt, batch).compile()
+    elif mode == "decode":
+        step = make_serve_step(cfg, None)
+        cache = init_decode_cache(cfg, B, S)
+        c = (
+            jax.jit(step)
+            .lower(params, cache, jnp.zeros((B, 1), jnp.int32), jnp.int32(S - 1))
+            .compile()
+        )
+    else:
+        step = make_prefill_step(cfg, None)
+        c = jax.jit(step).lower(params, {"tokens": jnp.zeros((B, S), jnp.int32)}).compile()
+    return c.cost_analysis()["flops"]
+
+
+@pytest.mark.parametrize("arch", VALIDATION_ARCHS)
+@pytest.mark.parametrize("mode", ["train", "prefill", "decode"])
+def test_analytic_flops_match_unrolled_hlo(arch, mode):
+    B, S = 2, 256
+    cfg = dataclasses.replace(get_reduced(arch), scan_unroll=True, inner_unroll=True, dtype="float32")
+    shape = ShapeConfig("probe", S, B, mode)
+    hlo = _compiled_flops(cfg, mode, B, S)
+    ana = analytic_costs(cfg, shape, chips=1)["flops"]
+    assert 0.9 < ana / hlo < 1.10, (arch, mode, ana, hlo, ana / hlo)
+
+
+def test_analytic_attention_tiles():
+    from repro.roofline.analytic import _attention_tiles
+
+    # causal full: triangular block count
+    assert _attention_tiles(1024, 256, 256, 0) == 4 * 5 // 2
+    # sliding window: span capped at S
+    assert _attention_tiles(1024, 256, 256, 256) == 4 * 2
+    # window >= S behaves like full causal span
+    assert _attention_tiles(512, 256, 256, 4096) == 2 * 2
+
+
+# --------------------------------------------------- HLO collective parser
+
+
+SAMPLE_HLO = """
+ENTRY %main {
+  %ag = bf16[8,256,1024]{2,1,0} all-gather(bf16[8,16,1024]{2,1,0} %p0), dimensions={1}
+  %ar.1 = f32[1024,512]{1,0} all-reduce(f32[1024,512]{1,0} %x), to_apply=%add
+  %ars = f32[64]{0} reduce-scatter(f32[1024]{0} %y), dimensions={0}
+  %a2a = bf16[16,64]{1,0} all-to-all(bf16[16,64]{1,0} %z), dimensions={0}
+  %cp = u32[4]{0} collective-permute(u32[4]{0} %w), source_target_pairs={{0,1}}
+  %ag2 = (f32[128]{0}, f32[128]{0}) all-gather-start(f32[8]{0} %q), dimensions={0}
+  %nothing = f32[2] add(f32[2] %a, f32[2] %b)
+}
+"""
+
+
+def test_collective_bytes_parser():
+    by_kind = collective_bytes(SAMPLE_HLO)
+    assert by_kind["all-gather"] == 8 * 256 * 1024 * 2 + 2 * 128 * 4  # incl. async start
+    assert by_kind["all-reduce"] == 1024 * 512 * 4
+    assert by_kind["reduce-scatter"] == 64 * 4
+    assert by_kind["all-to-all"] == 16 * 64 * 2
+    assert by_kind["collective-permute"] == 4 * 4
+    # ring model: all-reduce counts twice
+    link = collective_link_bytes(by_kind)
+    assert link == pytest.approx(
+        by_kind["all-gather"]
+        + 2 * by_kind["all-reduce"]
+        + by_kind["reduce-scatter"]
+        + by_kind["all-to-all"]
+        + by_kind["collective-permute"]
+    )
+
+
+def test_model_flops_estimate_modes():
+    from repro.configs import SHAPES, get_arch
+    from repro.roofline.report import model_flops_estimate
+
+    cfg = get_arch("qwen3-0.6b")
+    n = cfg.active_param_count()
+    t = SHAPES["train_4k"]
+    assert model_flops_estimate(cfg, t) == 6.0 * n * t.global_batch * t.seq_len
+    d = SHAPES["decode_32k"]
+    assert model_flops_estimate(cfg, d) == 2.0 * n * d.global_batch

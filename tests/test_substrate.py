@@ -1,0 +1,162 @@
+"""Tests for optim / data / checkpoint substrates."""
+import os
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import checkpoint, optim
+from repro.data import (
+    balanced_train_test, kfold_split, make_sparse_tensor, minibatches,
+    pad_to_multiple, sample_zero_entries,
+)
+from repro.data.tensor_store import EntrySet, SparseTensor
+
+# ------------------------------------------------------------------ optim ---
+
+
+def _rosenbrock(p):
+    x, y = p["x"], p["y"]
+    return (1.0 - x) ** 2 + 100.0 * (y - x * x) ** 2
+
+
+def test_lbfgs_minimizes_rosenbrock():
+    x0 = {"x": jnp.asarray(-1.2, jnp.float64), "y": jnp.asarray(1.0, jnp.float64)}
+    res = optim.minimize(_rosenbrock, x0, max_iters=200, tol=1e-10)
+    assert float(res.value) < 1e-12
+    np.testing.assert_allclose(float(res.params["x"]), 1.0, atol=1e-5)
+    np.testing.assert_allclose(float(res.params["y"]), 1.0, atol=1e-5)
+
+
+def test_lbfgs_quadratic_exact_in_few_iters():
+    a = jnp.asarray(np.diag([1.0, 10.0, 100.0]))
+
+    def f(x):
+        return 0.5 * x @ a @ x
+
+    res = optim.minimize(f, jnp.ones(3, jnp.float64), max_iters=50, tol=1e-12)
+    assert float(res.grad_norm) < 1e-10
+
+
+def test_adam_converges_on_quadratic():
+    opt = optim.adam(0.1)
+    params = {"w": jnp.asarray([3.0, -2.0])}
+    state = opt.init(params)
+
+    @jax.jit
+    def step(params, state):
+        g = jax.grad(lambda p: jnp.sum(p["w"] ** 2))(params)
+        upd, state = opt.update(g, state, params)
+        return optim.apply_updates(params, upd), state
+
+    for _ in range(300):
+        params, state = step(params, state)
+    assert float(jnp.max(jnp.abs(params["w"]))) < 1e-2
+
+
+def test_clip_by_global_norm():
+    opt = optim.clip_by_global_norm(1.0)
+    g = {"a": jnp.asarray([3.0, 4.0])}  # norm 5
+    upd, _ = opt.update(g, opt.init(g), None)
+    np.testing.assert_allclose(
+        float(jnp.linalg.norm(upd["a"])), 1.0, rtol=1e-5
+    )
+
+
+def test_schedules_monotone_sections():
+    sch = optim.schedules.linear_warmup_cosine(1.0, 10, 100)
+    vals = [float(sch(jnp.asarray(i))) for i in range(100)]
+    assert vals[0] < vals[5] < vals[9]  # warmup rising
+    assert vals[20] > vals[60] > vals[99]  # cosine decaying
+
+
+# ------------------------------------------------------------------- data ---
+
+
+def test_dataset_specs_footprints():
+    t, _ = make_sparse_tensor("alog", seed=0)
+    assert t.dims == (200, 100, 200)
+    assert 0.002 < t.density < 0.005
+    t2, _ = make_sparse_tensor("enron", seed=0)
+    assert set(np.unique(t2.vals)) == {1.0}
+
+
+def test_zero_sampling_disjoint_from_nonzeros():
+    t, _ = make_sparse_tensor("adclick", seed=1)
+    rng = np.random.default_rng(0)
+    zeros = sample_zero_entries(rng, t, 500)
+    nz = set(t.flat_index(t.idx).tolist())
+    zf = t.flat_index(zeros)
+    assert len(set(zf.tolist()) & nz) == 0
+    assert len(np.unique(zf)) == 500
+
+
+def test_balanced_split_protocol():
+    t, _ = make_sparse_tensor("alog", seed=2, max_nnz=2000)
+    rng = np.random.default_rng(0)
+    folds = kfold_split(rng, t, folds=5)
+    assert len(folds) == 5
+    train_rows, test_rows = folds[0]
+    assert len(train_rows) + len(test_rows) == t.nnz
+    train, test = balanced_train_test(rng, t, train_rows, test_rows)
+    # balanced: half of train entries are sampled zeros
+    assert np.sum(train.y == 0) == len(train_rows)
+    # train zeros disjoint from test zeros
+    tr_flat = set(t.flat_index(train.idx[train.y == 0]).tolist())
+    te_flat = set(t.flat_index(test.idx[test.y == 0]).tolist())
+    assert not (tr_flat & te_flat)
+
+
+@hypothesis.settings(deadline=None, max_examples=20)
+@hypothesis.given(n=st.integers(1, 200), mult=st.integers(1, 64))
+def test_property_padding(n, mult):
+    es = EntrySet(np.zeros((n, 3), np.int32), np.ones(n, np.float32))
+    b = pad_to_multiple(es, mult)
+    assert len(b.y) % mult == 0
+    assert b.w.sum() == n
+
+
+def test_minibatches_cover_everything_once_per_epoch():
+    es = EntrySet(
+        np.arange(30, dtype=np.int32).reshape(10, 3), np.arange(10, dtype=np.float32)
+    )
+    batches = list(minibatches(es, 4, np.random.default_rng(0), epochs=1))
+    ys = np.concatenate([b.y[b.w > 0] for b in batches])
+    assert sorted(ys.tolist()) == list(range(10))
+
+
+# -------------------------------------------------------------- checkpoint --
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {
+        "a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+        "b": (jnp.asarray(2, jnp.int32), jnp.asarray([1.5], jnp.bfloat16)),
+    }
+    path = os.path.join(tmp_path, "x.ckpt.msgpack")
+    checkpoint.save(path, tree)
+    zeros = jax.tree.map(jnp.zeros_like, tree)
+    back = checkpoint.restore(path, zeros)
+    for l1, l2 in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(np.asarray(l1, np.float32), np.asarray(l2, np.float32))
+
+
+def test_checkpoint_manager_retention(tmp_path):
+    mgr = checkpoint.CheckpointManager(str(tmp_path), keep=2)
+    tree = {"w": jnp.zeros(3)}
+    for step in (1, 5, 9):
+        mgr.save(step, jax.tree.map(lambda x: x + step, tree))
+    assert mgr.all_steps() == [5, 9]
+    restored, step = mgr.restore(tree)
+    assert step == 9
+    np.testing.assert_allclose(restored["w"], 9.0)
+
+
+def test_checkpoint_shape_mismatch_raises(tmp_path):
+    path = os.path.join(tmp_path, "x.ckpt.msgpack")
+    checkpoint.save(path, {"w": jnp.zeros(3)})
+    with pytest.raises(ValueError):
+        checkpoint.restore(path, {"w": jnp.zeros(4)})
